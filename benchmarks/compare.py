@@ -1,0 +1,50 @@
+"""Baseline vs optimized sweep comparison: per-(arch × shape) modeled step
+time (max of the three roofline terms) and the delta."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, Tuple
+
+
+def _load(run_dir: str, tag: str) -> Dict[Tuple[str, str, str], dict]:
+    out = {}
+    for p in glob.glob(os.path.join(run_dir, "*.json")):
+        with open(p) as f:
+            rec = json.load(f)
+        if rec.get("tag", "") != tag or rec.get("status") != "ok":
+            continue
+        out[(rec["arch"], rec["shape"], rec["mesh"])] = rec
+    return out
+
+
+def max_term(rec) -> float:
+    r = rec["roofline"]
+    return max(r["t_compute_s"], r["t_memory_s"], r["t_collective_s"])
+
+
+def main() -> None:
+    base = _load("experiments/dryrun", "")
+    opt = _load("experiments/dryrun_opt", "opt")
+    print("| arch | shape | mesh | baseline max-term (s) | optimized (s) | Δ |")
+    print("|---|---|---|---|---|---|")
+    total_b = total_o = 0.0
+    for key in sorted(base):
+        if key not in opt:
+            continue
+        b, o = max_term(base[key]), max_term(opt[key])
+        total_b += b
+        total_o += o
+        print(
+            f"| {key[0]} | {key[1]} | {key[2]} | {b:.3g} | {o:.3g} "
+            f"| {'−' if o <= b else '+'}{abs(1 - o / b) * 100:.0f}% |"
+        )
+    print(
+        f"| **sum** | | | **{total_b:.1f}** | **{total_o:.1f}** "
+        f"| **−{(1 - total_o / total_b) * 100:.0f}%** |"
+    )
+
+
+if __name__ == "__main__":
+    main()

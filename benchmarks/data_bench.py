@@ -1,0 +1,43 @@
+"""Paper table 3 analogue: bio data-pipeline throughput (BioNeMo reports
+dataloader scaling as part of the training path)."""
+from __future__ import annotations
+
+import tempfile
+import time
+
+
+def run(report):
+    from repro.data.dataset import build_synthetic_protein_memmap
+    from repro.data.pipeline import CLMBatches, MLMBatches
+    from repro.data.sampler import ClusterSampler, greedy_length_clusters
+
+    with tempfile.TemporaryDirectory() as d:
+        ds, tok = build_synthetic_protein_memmap(f"{d}/p", n=2000)
+        lengths = [len(ds[i]) for i in range(len(ds))]
+        sampler = ClusterSampler(greedy_length_clusters(lengths, 64))
+
+        it = iter(MLMBatches(ds, tok, sampler, batch=32, seq_len=256))
+        next(it)
+        t0 = time.perf_counter()
+        n = 20
+        for _ in range(n):
+            next(it)
+        us = (time.perf_counter() - t0) / n * 1e6
+        report("data/mlm_cluster_sampled_batch32x256", us,
+               f"seqs_per_s={32 / (us / 1e6):.0f}")
+
+        it = iter(CLMBatches(ds, batch=32, seq_len=256))
+        next(it)
+        t0 = time.perf_counter()
+        for _ in range(n):
+            next(it)
+        us = (time.perf_counter() - t0) / n * 1e6
+        report("data/clm_packed_batch32x256", us,
+               f"tokens_per_s={32 * 256 / (us / 1e6):.0f}")
+
+        # random access latency into the memmap store
+        t0 = time.perf_counter()
+        for i in range(0, 2000, 7):
+            _ = ds[i]
+        us = (time.perf_counter() - t0) / (2000 // 7) * 1e6
+        report("data/memmap_random_access", us, "per-sequence")

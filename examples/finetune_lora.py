@@ -1,0 +1,89 @@
+"""LoRA fine-tuning example: pretrain a small protein LM briefly, freeze
+it, then LoRA-adapt it to a shifted distribution (different motif library)
+— the BioNeMo downstream-adaptation recipe shape.
+
+    PYTHONPATH=src python examples/finetune_lora.py
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import ModelConfig, TrainConfig
+from repro.data.dataset import MemmapTokenDataset, synthetic_protein_sequences
+from repro.data.tokenizer import ProteinTokenizer
+from repro.models.model import build_model
+from repro.optim import adamw
+from repro.training import lora
+from repro.training.loop import run_training
+
+
+def stream(ds, batch, seq, seed=0):
+    rng = np.random.default_rng(seed)
+    while True:
+        idx = rng.integers(0, len(ds), size=batch)
+        toks = np.zeros((batch, seq), np.int32)
+        for r, i in enumerate(idx):
+            s = ds[int(i)][:seq]
+            toks[r, : len(s)] = s
+        yield {"tokens": toks}
+
+
+def main() -> None:
+    tok = ProteinTokenizer()
+    cfg = ModelConfig(
+        name="protein-lm", family="dense", num_layers=4, d_model=128,
+        num_heads=8, num_kv_heads=4, d_ff=512, vocab_size=tok.vocab_size,
+        dtype="float32",
+    )
+    model = build_model(cfg)
+
+    # --- pretrain on motif library A ---
+    seqs_a = synthetic_protein_sequences(800, seed=0)
+    ds_a = MemmapTokenDataset.write(
+        "/tmp/lora/a", [np.asarray(tok.encode(s), np.int32) for s in seqs_a]
+    )
+    tc = TrainConfig(global_batch=8, seq_len=64, total_steps=80,
+                     learning_rate=3e-3, warmup_steps=8, decay_steps=8,
+                     log_every=20)
+    state, hist = run_training(model, tc, stream(ds_a, 8, 64))
+    base = state.params
+
+    # --- domain shift: motif library B ---
+    seqs_b = synthetic_protein_sequences(800, seed=123)
+    ds_b = MemmapTokenDataset.write(
+        "/tmp/lora/b", [np.asarray(tok.encode(s), np.int32) for s in seqs_b]
+    )
+    batches_b = stream(ds_b, 8, 64, seed=1)
+    b0 = next(batches_b)
+    base_loss = float(model.loss_fn(base, b0)[0])
+
+    # --- LoRA adaptation (base frozen, ~1% trainable) ---
+    adapters = lora.init_adapters(base, rank=8, key=jax.random.PRNGKey(7))
+    n_base = sum(x.size for x in jax.tree.leaves(base))
+    print(f"\ntrainable: {lora.count_trainable(adapters):,} / {n_base:,} "
+          f"({100*lora.count_trainable(adapters)/n_base:.2f}%)")
+    loss_fn = lora.make_lora_loss(model, base)
+    opt = adamw.init_state(adapters)
+    tc_ft = TrainConfig(learning_rate=2e-3, weight_decay=0.0)
+
+    @jax.jit
+    def step(adapters, opt, batch):
+        (loss, _), g = jax.value_and_grad(loss_fn, has_aux=True)(adapters, batch)
+        adapters, opt = adamw.apply_updates(adapters, g, opt, jnp.float32(2e-3), tc_ft)
+        return adapters, opt, loss
+
+    losses = []
+    for i in range(60):
+        adapters, opt, loss = step(adapters, opt, next(batches_b))
+        losses.append(float(loss))
+        if i % 20 == 0:
+            print(f"ft step {i:3d} loss {losses[-1]:.4f}")
+
+    merged = lora.merged_params(base, adapters)
+    ft_loss = float(model.loss_fn(merged, b0)[0])
+    print(f"\ndomain-B loss: frozen base {base_loss:.4f} -> LoRA {ft_loss:.4f}")
+    assert ft_loss < base_loss, "LoRA adaptation failed to improve"
+
+
+if __name__ == "__main__":
+    main()

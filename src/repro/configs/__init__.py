@@ -1,0 +1,59 @@
+"""Model-zoo registry: one module per architecture (``--arch <id>``).
+
+Every config cites its source in ``citation``.  ``get_config(name)`` returns
+the full config; ``get_smoke_config(name)`` the reduced same-family variant
+used by CPU smoke tests.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Callable, Dict, List
+
+from repro.core.config import ModelConfig, reduced
+
+_REGISTRY: Dict[str, Callable[[], ModelConfig]] = {}
+
+_MODULES = [
+    "command_r_35b",
+    "mamba2_2p7b",
+    "qwen1p5_32b",
+    "llama4_scout_17b_a16e",
+    "whisper_medium",
+    "internvl2_26b",
+    "qwen2_7b",
+    "llama3_405b",
+    "llama4_maverick_400b_a17b",
+    "jamba_1p5_large_398b",
+    # paper's own bio recipes
+    "esm2_650m",
+    "esm2_3b",
+    "geneformer_106m",
+    "molmim_65m",
+]
+
+
+def register(fn: Callable[[], ModelConfig]) -> Callable[[], ModelConfig]:
+    cfg = fn()
+    _REGISTRY[cfg.name] = fn
+    return fn
+
+
+def _load_all() -> None:
+    for m in _MODULES:
+        importlib.import_module(f"repro.configs.{m}")
+
+
+def list_archs() -> List[str]:
+    _load_all()
+    return sorted(_REGISTRY)
+
+
+def get_config(name: str) -> ModelConfig:
+    _load_all()
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; available: {sorted(_REGISTRY)}")
+    return _REGISTRY[name]()
+
+
+def get_smoke_config(name: str) -> ModelConfig:
+    return reduced(get_config(name))

@@ -1,0 +1,150 @@
+"""Minimal parameter-definition system (no flax dependency).
+
+A model is described as a nested dict of :class:`P` (param defs).  One walker
+materializes parameters (with per-leaf PRNG folding), another produces the
+matching ``PartitionSpec`` tree from logical axis names, so initialization and
+sharding live in one place — the BioNeMo/Megatron "model-parallel aware init"
+behavior.
+
+Logical axis vocabulary (mapped to mesh axes by ``repro.parallel.sharding``):
+  fsdp      — weight dim sharded over the FSDP axes (ZeRO-3 style)
+  tp        — weight dim sharded over the `model` axis (tensor parallel)
+  experts   — expert dim (maps to `model`: expert parallel)
+  layers    — scan-stacked layer dim (never sharded)
+  None      — replicated
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+Initializer = Callable[[jax.Array, Tuple[int, ...], Any], jax.Array]
+
+
+def _normal(scale: float) -> Initializer:
+    def init(key, shape, dtype):
+        return (scale * jax.random.normal(key, shape, jnp.float32)).astype(dtype)
+
+    return init
+
+
+def _zeros(key, shape, dtype):
+    return jnp.zeros(shape, dtype)
+
+
+def _ones(key, shape, dtype):
+    return jnp.ones(shape, dtype)
+
+
+def fan_in_init(fan_in: int) -> Initializer:
+    return _normal(1.0 / math.sqrt(max(fan_in, 1)))
+
+
+@dataclass(frozen=True)
+class P:
+    """Single parameter definition."""
+
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: Union[str, Initializer] = "fan_in"
+    fan_in: int = 0        # for "fan_in" init; 0 -> infer from shape[-2] or shape[0]
+    scale: float = 0.02    # for "normal" init
+    dtype: Optional[str] = None
+
+    def initializer(self) -> Initializer:
+        if callable(self.init):
+            return self.init
+        if self.init == "zeros":
+            return _zeros
+        if self.init == "ones":
+            return _ones
+        if self.init == "normal":
+            return _normal(self.scale)
+        if self.init == "fan_in":
+            fi = self.fan_in
+            if fi == 0:
+                fi = self.shape[-2] if len(self.shape) >= 2 else self.shape[0]
+            return fan_in_init(fi)
+        raise ValueError(f"unknown init {self.init!r}")
+
+
+def stacked(p: P, n: int) -> P:
+    """Prepend a scan `layers` dimension to a param def."""
+    return P(
+        shape=(n, *p.shape),
+        axes=("layers", *p.axes),
+        init=p.init,
+        fan_in=p.fan_in or (p.shape[-2] if len(p.shape) >= 2 else p.shape[0]),
+        scale=p.scale,
+        dtype=p.dtype,
+    )
+
+
+def stack_tree(tree: Any, n: int) -> Any:
+    return jax.tree.map(lambda p: stacked(p, n), tree, is_leaf=lambda x: isinstance(x, P))
+
+
+def _walk(tree: Any, path: Tuple[str, ...] = ()):
+    if isinstance(tree, P):
+        yield path, tree
+    elif isinstance(tree, dict):
+        for k in sorted(tree):
+            yield from _walk(tree[k], path + (k,))
+    else:
+        raise TypeError(f"bad node at {path}: {type(tree)}")
+
+
+def materialize(defs: Any, key: jax.Array, param_dtype) -> Any:
+    """Instantiate a P-tree into a parameter pytree (deterministic per path)."""
+
+    def build(tree, path=()):
+        if isinstance(tree, P):
+            k = key
+            for name in path:
+                k = jax.random.fold_in(k, hash(name) % (2**31))
+            dt = jnp.dtype(tree.dtype) if tree.dtype else param_dtype
+            return tree.initializer()(k, tree.shape, dt)
+        return {k: build(v, path + (k,)) for k, v in tree.items()}
+
+    return build(defs)
+
+
+def abstract(defs: Any, param_dtype) -> Any:
+    """ShapeDtypeStruct pytree matching materialize() — for AOT lowering."""
+
+    def build(tree):
+        if isinstance(tree, P):
+            dt = jnp.dtype(tree.dtype) if tree.dtype else param_dtype
+            return jax.ShapeDtypeStruct(tree.shape, dt)
+        return {k: build(v) for k, v in tree.items()}
+
+    return build(defs)
+
+
+def spec_tree(defs: Any, rules: Dict[str, Any]):
+    """PartitionSpec pytree from logical axes via `rules` (see parallel.sharding)."""
+    from jax.sharding import PartitionSpec
+
+    def one(p: P):
+        phys = []
+        for ax in p.axes:
+            m = rules.get(ax) if ax is not None else None
+            phys.append(m)
+        # trim trailing Nones for tidier specs
+        while phys and phys[-1] is None:
+            phys.pop()
+        return PartitionSpec(*phys)
+
+    return jax.tree.map(one, defs, is_leaf=lambda x: isinstance(x, P))
+
+
+def count_params(params: Any) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))
+
+
+def param_bytes(params: Any) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(params))

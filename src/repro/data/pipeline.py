@@ -1,0 +1,101 @@
+"""Batch pipelines: MLM (ESM-2/Geneformer recipe) and CLM packing.
+
+Pure numpy on the host (BioNeMo uses CPU dataloader workers); outputs are
+ready-to-``device_put`` dicts matching ``Model.loss_fn`` batch contracts.
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterator, Optional
+
+import numpy as np
+
+from repro.data.dataset import MemmapTokenDataset
+from repro.data.sampler import ClusterSampler
+from repro.data.tokenizer import _CharTokenizer
+
+
+def mlm_corrupt(
+    tokens: np.ndarray,       # (B, S) int32, padded
+    tokenizer: _CharTokenizer,
+    rng: np.random.Generator,
+    mask_prob: float = 0.15,
+) -> Dict[str, np.ndarray]:
+    """BERT/ESM-2 corruption: of selected positions 80% <mask>, 10% random,
+    10% kept; loss only on selected positions."""
+    B, S = tokens.shape
+    special = tokens < 5
+    pick = (rng.random((B, S)) < mask_prob) & ~special
+    # guarantee >=1 target per row (avoids empty-loss rows)
+    none = ~pick.any(axis=1)
+    if none.any():
+        first_real = np.argmax(~special, axis=1)
+        pick[np.where(none)[0], first_real[none]] = ~special[np.where(none)[0], first_real[none]]
+    r = rng.random((B, S))
+    corrupted = tokens.copy()
+    corrupted[pick & (r < 0.8)] = tokenizer.mask_id
+    rand_ids = rng.integers(5, tokenizer.vocab_size, size=(B, S))
+    sel_rand = pick & (r >= 0.8) & (r < 0.9)
+    corrupted[sel_rand] = rand_ids[sel_rand]
+    return {
+        "tokens": corrupted.astype(np.int32),
+        "targets": tokens.astype(np.int32),
+        "loss_mask": pick.astype(np.float32),
+    }
+
+
+class MLMBatches:
+    """ESM-2-style stream: cluster-sample -> pad -> corrupt."""
+
+    def __init__(
+        self,
+        ds: MemmapTokenDataset,
+        tokenizer: _CharTokenizer,
+        sampler: Optional[ClusterSampler],
+        batch: int,
+        seq_len: int,
+        mask_prob: float = 0.15,
+        seed: int = 0,
+    ):
+        self.ds, self.tok, self.sampler = ds, tokenizer, sampler
+        self.batch, self.seq_len, self.mask_prob = batch, seq_len, mask_prob
+        self.rng = np.random.default_rng(seed)
+
+    def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
+        while True:
+            if self.sampler is not None:
+                idx = self.sampler.sample(self.batch)
+            else:
+                idx = self.rng.integers(0, len(self.ds), size=self.batch)
+            toks = np.zeros((self.batch, self.seq_len), np.int32)
+            for r, i in enumerate(idx):
+                s = self.ds[int(i)][: self.seq_len]
+                toks[r, : len(s)] = s
+            yield mlm_corrupt(toks, self.tok, self.rng, self.mask_prob)
+
+
+class CLMBatches:
+    """Packed causal-LM stream (documents concatenated to fixed windows)."""
+
+    def __init__(
+        self, ds: MemmapTokenDataset, batch: int, seq_len: int, seed: int = 0
+    ):
+        self.ds, self.batch, self.seq_len = ds, batch, seq_len
+        self.rng = np.random.default_rng(seed)
+        self._buf = np.empty((0,), np.int32)
+
+    def _fill(self, need: int):
+        chunks = [self._buf]
+        have = len(self._buf)
+        while have < need:
+            s = self.ds[int(self.rng.integers(len(self.ds)))]
+            chunks.append(s)
+            have += len(s)
+        self._buf = np.concatenate(chunks)
+
+    def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
+        need = self.batch * self.seq_len
+        while True:
+            self._fill(need)
+            flat = self._buf[:need]
+            self._buf = self._buf[need:]
+            yield {"tokens": flat.reshape(self.batch, self.seq_len).astype(np.int32)}

@@ -1,0 +1,125 @@
+"""Pallas TPU fused vocab-softmax cross-entropy.
+
+For 128k–256k vocabularies the (tokens × vocab) logits tensor is the single
+largest training activation (llama3-405b train_4k: 1M × 128k fp32 = 0.5 TB
+globally).  This kernel fuses the output projection with an online
+log-sum-exp so full logits never reach HBM:
+
+  grid (token_blocks, vocab_blocks) — vocab innermost; per step:
+    logits_blk = h_blk @ W_blk            (bt × bv on the MXU)
+    online max / sumexp update            (VMEM scratch, fp32)
+    gather target logit if it falls in this vocab block
+  final step emits per-token  loss = lse - logit[target].
+
+VMEM per step: bt·D + D·bv + bt·bv fp32 ≈ (128·4096 + 4096·512 + 128·512)·4
+≈ 10.5 MB at D=4096 — tiles shrink automatically for larger D.
+
+The training path uses the jnp blockwise implementation in ``ops.py``
+(autodiff-able); this kernel is the TPU serving/eval path and the subject of
+the allclose sweep vs ``ref.cross_entropy_ref``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _ce_kernel(
+    h_ref, w_ref, tgt_ref,
+    loss_ref, lse_ref,
+    m_scr, l_scr, t_scr,
+    *,
+    block_t: int,
+    block_v: int,
+    v_steps: int,
+    vocab: int,
+):
+    vi = pl.program_id(1)
+
+    @pl.when(vi == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        t_scr[...] = jnp.full_like(t_scr, NEG_INF)
+
+    h = h_ref[...].astype(jnp.float32)              # (bt, D)
+    w = w_ref[...].astype(jnp.float32)              # (D, bv)
+    logits = jax.lax.dot_general(
+        h, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )                                                # (bt, bv)
+    # mask vocab padding (last block may cover padded ids)
+    col = vi * block_v + jax.lax.broadcasted_iota(jnp.int32, (block_t, block_v), 1)
+    logits = jnp.where(col < vocab, logits, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(logits, axis=-1, keepdims=True))
+    p = jnp.exp(logits - m_new)
+    l_scr[...] = jnp.exp(m_prev - m_new) * l_scr[...] + jnp.sum(p, axis=-1, keepdims=True)
+    m_scr[...] = m_new
+
+    tgt = tgt_ref[...]                               # (bt,)
+    hit = col == tgt[:, None]
+    t_here = jnp.max(jnp.where(hit, logits, NEG_INF), axis=-1, keepdims=True)
+    t_scr[...] = jnp.maximum(t_scr[...], t_here)
+
+    @pl.when(vi == v_steps - 1)
+    def _final():
+        lse = m_scr[...] + jnp.log(jnp.maximum(l_scr[...], 1e-30))
+        loss_ref[...] = (lse - t_scr[...])[:, 0]
+        lse_ref[...] = lse[:, 0]
+
+
+def fused_cross_entropy(
+    hidden: jax.Array,     # (T, D)
+    w_out: jax.Array,      # (D, Vpad)
+    targets: jax.Array,    # (T,) int32
+    *,
+    vocab: int = 0,        # true vocab (<= Vpad); 0 -> Vpad
+    block_t: int = 128,
+    block_v: int = 512,
+    interpret: bool = False,
+):
+    T, D = hidden.shape
+    Vp = w_out.shape[1]
+    vocab = vocab or Vp
+    block_t = min(block_t, T)
+    block_v = min(block_v, Vp)
+    assert T % block_t == 0 and Vp % block_v == 0, (T, Vp, block_t, block_v)
+    v_steps = Vp // block_v
+    kernel = functools.partial(
+        _ce_kernel,
+        block_t=block_t,
+        block_v=block_v,
+        v_steps=v_steps,
+        vocab=vocab,
+    )
+    loss, lse = pl.pallas_call(
+        kernel,
+        grid=(T // block_t, v_steps),
+        in_specs=[
+            pl.BlockSpec((block_t, D), lambda ti, vi: (ti, 0)),
+            pl.BlockSpec((D, block_v), lambda ti, vi: (0, vi)),
+            pl.BlockSpec((block_t,), lambda ti, vi: (ti,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_t,), lambda ti, vi: (ti,)),
+            pl.BlockSpec((block_t,), lambda ti, vi: (ti,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((T,), jnp.float32),
+            jax.ShapeDtypeStruct((T,), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_t, 1), jnp.float32),
+            pltpu.VMEM((block_t, 1), jnp.float32),
+            pltpu.VMEM((block_t, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(hidden, w_out, targets)
+    return loss, lse

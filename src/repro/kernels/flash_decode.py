@@ -1,0 +1,131 @@
+"""Pallas TPU flash-decoding: single-token attention over a long KV cache,
+split over cache blocks with running log-sum-exp combine.
+
+This is the kernel behind the decode shapes (decode_32k, long_500k): one
+query token per sequence against a 32k–512k cache.  The GPU original
+(flash-decoding) splits the cache across thread blocks and combines with a
+second kernel; the TPU-native form makes the cache-block dim the innermost
+sequential grid axis so the combine state (m, l, acc) lives in VMEM scratch
+— no second pass, no HBM round-trips for partials.
+
+Grid (batch, kv_heads, cache_blocks); each step loads a
+(block_t × head_dim) K/V tile and all `group` query heads that share it
+(GQA: q tile (group × head_dim)).  MXU work per step is a
+(group × block_t) logit panel — group=4..16, so block_t is kept large
+(512) to keep the MXU busy.
+
+Validated against ``ref.attention_ref`` (q_offset/masked) in interpret
+mode; the distributed version shards the cache-seq dim over the `model`
+mesh axis and GSPMD reduces the per-shard (m, l, acc) partials — the same
+math this kernel does locally.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _fd_kernel(
+    q_ref,       # (1, 1, group, D)
+    k_ref,       # (1, block_t, 1, D)
+    v_ref,
+    len_ref,     # (1,) valid length for this batch row
+    o_ref,       # (1, 1, group, D)
+    m_scr, l_scr, acc_scr,
+    *,
+    scale: float,
+    block_t: int,
+    t_steps: int,
+    softcap: float,
+):
+    ti = pl.program_id(2)
+
+    @pl.when(ti == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0, 0].astype(jnp.float32)         # (group, D)
+    k = k_ref[0, :, 0].astype(jnp.float32)         # (block_t, D)
+    v = v_ref[0, :, 0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale                                       # (group, block_t)
+    if softcap > 0.0:
+        s = softcap * jnp.tanh(s / softcap)
+
+    pos = ti * block_t + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(pos < len_ref[0], s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    p = jnp.where(m_new <= NEG_INF / 2, 0.0, p)
+    alpha = jnp.exp(m_prev - m_new)
+    m_scr[...] = m_new
+    l_scr[...] = alpha * l_scr[...] + jnp.sum(p, axis=-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+    @pl.when(ti == t_steps - 1)
+    def _final():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0, 0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+def flash_decode(
+    q: jax.Array,         # (B, 1, H, D)
+    k_cache: jax.Array,   # (B, T, Hkv, D)
+    v_cache: jax.Array,
+    lengths: jax.Array,   # (B,) int32 valid cache length
+    *,
+    softcap: float = 0.0,
+    block_t: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    B, _, H, D = q.shape
+    T, Hkv = k_cache.shape[1], k_cache.shape[2]
+    assert H % Hkv == 0
+    group = H // Hkv
+    block_t = min(block_t, T)
+    assert T % block_t == 0, (T, block_t)
+    t_steps = T // block_t
+    scale = 1.0 / math.sqrt(D)
+
+    qg = q.reshape(B, 1, Hkv, group, D)
+
+    kernel = functools.partial(
+        _fd_kernel,
+        scale=scale, block_t=block_t, t_steps=t_steps, softcap=softcap,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, Hkv, t_steps),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, group, D), lambda b, h, ti: (b, 0, h, 0, 0)),
+            pl.BlockSpec((1, block_t, 1, D), lambda b, h, ti: (b, ti, h, 0)),
+            pl.BlockSpec((1, block_t, 1, D), lambda b, h, ti: (b, ti, h, 0)),
+            pl.BlockSpec((1,), lambda b, h, ti: (b,)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, 1, group, D), lambda b, h, ti: (b, 0, h, 0, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, 1, Hkv, group, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((group, 1), jnp.float32),
+            pltpu.VMEM((group, 1), jnp.float32),
+            pltpu.VMEM((group, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qg, k_cache, v_cache, lengths)
+    return out.reshape(B, 1, H, D)

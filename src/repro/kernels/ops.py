@@ -1,0 +1,436 @@
+"""Kernel dispatch + memory-bounded jnp implementations.
+
+Three implementations exist for each hot-spot:
+  * ``pallas``  — the TPU kernel (``flash_attention.py`` etc.), used on TPU.
+  * ``xla``     — blockwise/scanned jnp with the same O(block) memory
+                  behavior, autodiff-able; used on CPU, in the dry-run
+                  lowering (keeps HLO memory honest) and as the training
+                  backward path.
+  * ``naive``   — the oracle in ``ref.py`` (tests only).
+
+``impl="auto"`` resolves to pallas on TPU, xla elsewhere.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention as _fa_pallas
+from repro.kernels.rmsnorm import layernorm as _ln_pallas
+from repro.kernels.rmsnorm import rmsnorm as _rms_pallas
+from repro.kernels.cross_entropy import fused_cross_entropy as _ce_pallas
+from repro.kernels.ssd_scan import ssd_scan as _ssd_pallas
+
+NEG_INF = -1e30
+
+
+import os
+
+
+def _resolve(impl: str) -> str:
+    forced = os.environ.get("REPRO_FORCE_IMPL", "")
+    if forced:
+        return forced  # benchmark harness: force naive/xla/pallas globally
+    if impl != "auto":
+        return impl
+    return "pallas" if jax.default_backend() == "tpu" else "xla"
+
+
+# --------------------------------------------------------------------- #
+# attention
+# --------------------------------------------------------------------- #
+def _blockwise_attention_xla(
+    q, k, v, *, causal, window, softcap, q_offset, block_k=0
+):
+    """Flash-attention semantics as a lax.scan over kv blocks (O(S·block) mem).
+
+    Tuning knobs found via dry-run traffic analysis (EXPERIMENTS.md §Perf
+    scout iter-3):
+      * block_k defaults to 2048 (env REPRO_ATTN_BLOCK_K) — the fp32
+        (m, l, acc) scan carries round-trip HBM once per kv block, so
+        carry traffic scales 1/block_k;
+      * probability blocks are cast to the input dtype (bf16) before the
+        PV matmul with fp32 accumulation — halves the largest per-block
+        buffer, mirroring what the MXU kernel does;
+      * GQA K/V are NOT repeated — the einsum runs in grouped-head form.
+    """
+    B, S, H, D = q.shape
+    T, Hkv = k.shape[1], k.shape[2]
+    group = H // Hkv
+    if block_k <= 0:
+        block_k = int(os.environ.get("REPRO_ATTN_BLOCK_K", "2048"))
+    block_k = min(block_k, T)
+    if T % block_k:  # fall back to one block (small T)
+        block_k = T
+    nblk = T // block_k
+    scale = 1.0 / jnp.sqrt(jnp.asarray(D, jnp.float32))
+    qg = q.reshape(B, S, Hkv, group, D)
+    q_pos = jnp.arange(S) + q_offset
+
+    kb = k.reshape(B, nblk, block_k, Hkv, D)
+    vb = v.reshape(B, nblk, block_k, Hkv, D)
+
+    def body(carry, blk):
+        m, l, acc = carry                          # (B,Hkv,g,S), ..., (B,Hkv,g,S,D)
+        kblk, vblk, ki = blk                       # (B,bk,Hkv,D)
+        s = jnp.einsum(
+            "bshgd,bthd->bhgst", qg, kblk, preferred_element_type=jnp.float32
+        ) * scale                                   # (B,Hkv,g,S,bk) fp32
+        if softcap > 0.0:
+            s = softcap * jnp.tanh(s / softcap)
+        k_pos = ki * block_k + jnp.arange(block_k)
+        mask = jnp.ones((S, block_k), bool)
+        if causal:
+            mask &= k_pos[None, :] <= q_pos[:, None]
+        if window > 0:
+            mask &= k_pos[None, :] > (q_pos[:, None] - window)
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        p = jnp.where(m_new[..., None] <= NEG_INF / 2, 0.0, p)
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bhgst,bthd->bhgsd", p.astype(q.dtype), vblk,
+            preferred_element_type=jnp.float32,
+        )
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Hkv, group, S), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, group, S), jnp.float32)
+    a0 = jnp.zeros((B, Hkv, group, S, D), jnp.float32)
+    xs = (
+        jnp.moveaxis(kb, 1, 0),
+        jnp.moveaxis(vb, 1, 0),
+        jnp.arange(nblk),
+    )
+    (m, l, acc), _ = jax.lax.scan(jax.checkpoint(body), (m0, l0, a0), xs)
+    out = acc / jnp.maximum(l, 1e-30)[..., None]          # (B,Hkv,g,S,D)
+    out = out.reshape(B, H, S, D)
+    return jnp.transpose(out, (0, 2, 1, 3)).astype(q.dtype)
+
+
+def attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    softcap: float = 0.0,
+    q_offset: int = 0,
+    impl: str = "auto",
+    interpret: bool = False,
+) -> jax.Array:
+    impl = _resolve(impl)
+    if impl == "pallas":
+        return _fa_pallas(
+            q, k, v, causal=causal, window=window, softcap=softcap,
+            q_offset=q_offset, interpret=interpret,
+        )
+    if impl == "naive":
+        return ref.attention_ref(
+            q, k, v, causal=causal, window=window, softcap=softcap, q_offset=q_offset
+        )
+    return _blockwise_attention_xla(
+        q, k, v, causal=causal, window=window, softcap=softcap, q_offset=q_offset
+    )
+
+
+def decode_attention(
+    q: jax.Array,         # (B, 1, H, D)
+    k_cache: jax.Array,   # (B, T, Hkv, D)  — seq dim may be mesh-sharded
+    v_cache: jax.Array,
+    length: jax.Array,    # (B,) valid cache length per sequence
+    *,
+    softcap: float = 0.0,
+    impl: str = "auto",
+    interpret: bool = False,
+) -> jax.Array:
+    """Single-token attention over a (possibly sequence-sharded) KV cache.
+
+    Written as plain reductions over the cache sequence dim: under GSPMD a
+    `model`-sharded cache turns max/sum into small all-reduces of per-shard
+    statistics — the collective structure of flash-decoding, for free.
+    """
+    if _resolve(impl) == "pallas":
+        from repro.kernels.flash_decode import flash_decode
+
+        return flash_decode(
+            q, k_cache, v_cache, length.astype(jnp.int32),
+            softcap=softcap, interpret=interpret,
+        )
+    B, _, H, D = q.shape
+    T, Hkv = k_cache.shape[1], k_cache.shape[2]
+    group = H // Hkv
+    scale = 1.0 / jnp.sqrt(jnp.asarray(D, jnp.float32))
+    # grouped-head form: never jnp.repeat the cache (repeating reads the
+    # 32k/500k cache `group`× in fp32 — found via decode traffic analysis)
+    qg = q[:, 0].reshape(B, Hkv, group, D)
+    s = jnp.einsum(
+        "bhgd,bthd->bhgt", qg, k_cache, preferred_element_type=jnp.float32
+    ) * scale                                          # (B, Hkv, g, T) fp32
+    if softcap > 0.0:
+        s = softcap * jnp.tanh(s / softcap)
+    valid = jnp.arange(T)[None, :] < length[:, None]   # (B, T)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    denom = jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum(
+        "bhgt,bthd->bhgd",
+        (p / jnp.maximum(denom, 1e-30)).astype(q.dtype),
+        v_cache,
+        preferred_element_type=jnp.float32,
+    )
+    return out.reshape(B, 1, H, D).astype(q.dtype)
+
+
+# --------------------------------------------------------------------- #
+# norms
+#
+# The xla paths use custom VJPs engineered so every FULL-SIZE fusion output
+# stays in the input dtype (bf16); only per-row statistics are fp32.  The
+# autodiff'd fp32-math norm materializes fp32 residual-stream buffers in
+# fwd+bwd+remat — found via the dry-run traffic breakdown (llama3-405b:
+# 48% of HBM traffic; EXPERIMENTS.md §Perf llama3 iter-2).  This mirrors
+# what the fused Pallas/Apex norm kernels do on real hardware.
+# --------------------------------------------------------------------- #
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def _rmsnorm_xla(x, w, eps):
+    return ref.rmsnorm_ref(x, w, eps)
+
+
+def _rms_fwd(x, w, eps):
+    xf = x.astype(jnp.float32)
+    rstd = jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)  # (..,1)
+    y = (xf * rstd * w.astype(jnp.float32)).astype(x.dtype)
+    return y, (x, w, rstd)
+
+
+def _rms_bwd(eps, res, dy):
+    x, w, rstd = res
+    D = x.shape[-1]
+    dyw = (dy * w).astype(jnp.float32)          # fused: read dy,w -> temp
+    xf = x.astype(jnp.float32)
+    # per-row scalar: (dy.w . xhat) / D
+    c = jnp.sum(dyw * xf, axis=-1, keepdims=True) * (rstd * rstd) / D   # (..,1)
+    dx = ((dyw - xf * c) * rstd).astype(x.dtype)
+    dw = jnp.sum((dy.astype(jnp.float32)) * xf * rstd, axis=tuple(range(x.ndim - 1)))
+    return dx, dw.astype(w.dtype)
+
+
+_rmsnorm_xla.defvjp(_rms_fwd, _rms_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def _layernorm_xla(x, w, b, eps):
+    return ref.layernorm_ref(x, w, b, eps)
+
+
+def _ln_fwd(x, w, b, eps):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    xc = xf - mu
+    rstd = jax.lax.rsqrt(jnp.mean(xc * xc, axis=-1, keepdims=True) + eps)
+    y = xc * rstd * w.astype(jnp.float32)
+    if b is not None:
+        y = y + b.astype(jnp.float32)
+    return y.astype(x.dtype), (x, w, mu, rstd)
+
+
+def _ln_bwd(eps, res, dy):
+    x, w, mu, rstd = res
+    D = x.shape[-1]
+    xhat_f = (x.astype(jnp.float32) - mu) * rstd
+    dyw = (dy * w).astype(jnp.float32)
+    c1 = jnp.mean(dyw, axis=-1, keepdims=True)
+    c2 = jnp.mean(dyw * xhat_f, axis=-1, keepdims=True)
+    dx = ((dyw - c1 - xhat_f * c2) * rstd).astype(x.dtype)
+    dyf = dy.astype(jnp.float32)
+    axes = tuple(range(x.ndim - 1))
+    dw = jnp.sum(dyf * xhat_f, axis=axes).astype(w.dtype)
+    db = jnp.sum(dyf, axis=axes).astype(w.dtype)
+    return dx, dw, db
+
+
+_layernorm_xla.defvjp(_ln_fwd, _ln_bwd)
+
+
+def rmsnorm(x, w, eps: float = 1e-5, *, impl: str = "auto", interpret: bool = False):
+    impl = _resolve(impl)
+    if impl == "pallas":
+        return _rms_pallas(x, w, eps, interpret=interpret)
+    if impl == "naive":
+        return ref.rmsnorm_ref(x, w, eps)
+    return _rmsnorm_xla(x, w, eps)
+
+
+def layernorm(x, w, b=None, eps: float = 1e-5, *, impl: str = "auto", interpret: bool = False):
+    impl = _resolve(impl)
+    if impl == "pallas":
+        return _ln_pallas(x, w, b, eps, interpret=interpret)
+    if impl == "naive":
+        return ref.layernorm_ref(x, w, b, eps)
+    if b is None:
+        # reuse the 3-arg vjp with a zero bias to keep one code path
+        return _layernorm_xla(x, w, jnp.zeros_like(w), eps)
+    return _layernorm_xla(x, w, b, eps)
+
+
+# --------------------------------------------------------------------- #
+# fused cross-entropy
+# --------------------------------------------------------------------- #
+def _blockwise_ce_xla(hidden, w_out, targets, *, vocab, block_v=2048):
+    """lse via checkpointed scan over vocab blocks; logits never materialize.
+
+    The matmuls run in the input dtype with fp32 ACCUMULATION
+    (preferred_element_type) instead of upcasting `hidden` to fp32 — an
+    upfront fp32 cast makes the hidden cotangent fp32 and cascades fp32
+    residual-stream buffers through the entire backward pass (found via
+    the dry-run traffic breakdown; EXPERIMENTS.md §Perf llama3 iter-1)."""
+    T, D = hidden.shape
+    Vp = w_out.shape[1]
+    block_v = min(block_v, Vp)
+    if Vp % block_v:
+        block_v = Vp
+    nblk = Vp // block_v
+    wb = jnp.moveaxis(w_out.reshape(D, nblk, block_v), 1, 0)  # (nblk, D, bv)
+
+    def body(_, blk):
+        wblk, vi = blk
+        logits = jax.lax.dot_general(
+            hidden, wblk, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )                                                      # (T, bv) fp32
+        col = vi * block_v + jnp.arange(block_v)
+        logits = jnp.where(col[None, :] < vocab, logits, NEG_INF)
+        blk_lse = jax.scipy.special.logsumexp(logits, axis=-1)  # (T,)
+        return None, blk_lse
+
+    _, blk_lses = jax.lax.scan(jax.checkpoint(body), None, (wb, jnp.arange(nblk)))
+    lse = jax.scipy.special.logsumexp(blk_lses, axis=0)         # (T,)
+    w_tgt = jnp.take(w_out, targets, axis=1)                    # (D, T)
+    tgt_logit = jnp.einsum(
+        "td,dt->t", hidden, w_tgt, preferred_element_type=jnp.float32
+    )
+    return lse - tgt_logit, lse
+
+
+def cross_entropy(
+    hidden: jax.Array,
+    w_out: jax.Array,
+    targets: jax.Array,
+    *,
+    vocab: int = 0,
+    impl: str = "auto",
+    interpret: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    vocab = vocab or w_out.shape[1]
+    impl = _resolve(impl)
+    if impl == "pallas":
+        return _ce_pallas(hidden, w_out, targets, vocab=vocab, interpret=interpret)
+    if impl == "naive":
+        return ref.cross_entropy_ref(hidden, w_out[:, :vocab], targets)
+    return _blockwise_ce_xla(hidden, w_out, targets, vocab=vocab)
+
+
+# --------------------------------------------------------------------- #
+# Mamba-2 SSD
+# --------------------------------------------------------------------- #
+def _ssd_chunked_xla(x, dt, A, Bm, Cm, D, *, chunk=64, init_state=None):
+    """Chunked dual form as jnp (mirrors the kernel math), scan over chunks."""
+    Bsz, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    group = H // G
+    chunk = min(chunk, S)
+    if S % chunk:
+        chunk = S
+    nc = S // chunk
+
+    xf = x.astype(jnp.float32).reshape(Bsz, nc, chunk, H, P)
+    dtf = dt.astype(jnp.float32).reshape(Bsz, nc, chunk, H)
+    Bf = jnp.repeat(Bm.astype(jnp.float32), group, axis=2).reshape(Bsz, nc, chunk, H, N)
+    Cf = jnp.repeat(Cm.astype(jnp.float32), group, axis=2).reshape(Bsz, nc, chunk, H, N)
+    Af = A.astype(jnp.float32)
+
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    def body(h, blk):
+        xc, dtc, bc, cc = blk  # (B,chunk,H,*)
+        da = dtc * Af[None, None, :]                 # (B,L,H)
+        cum = jnp.cumsum(da, axis=1)
+        seg = cum[:, -1]                             # (B,H)
+        diff = cum[:, :, None, :] - cum[:, None, :, :]   # (B,L,L,H)
+        decay = jnp.where(causal[None, :, :, None], jnp.exp(diff), 0.0)
+        scores = jnp.einsum("blhn,bshn->blsh", cc, bc)
+        # the (L × L) attention-like weights feed an MXU matmul: store them
+        # in the input dtype with fp32 accumulation (EXPERIMENTS §Perf
+        # jamba iter-4) — decay statistics stay fp32.
+        att = (scores * decay * dtc[:, None, :, :]).astype(x.dtype)
+        y = jnp.einsum(
+            "blsh,bshp->blhp", att, xc.astype(x.dtype),
+            preferred_element_type=jnp.float32,
+        )
+        decay_in = jnp.exp(cum)                      # (B,L,H)
+        y += jnp.einsum("blhn,bhpn,blh->blhp", cc, h, decay_in)
+        decay_out = jnp.exp(seg[:, None, :] - cum)   # (B,L,H)
+        xw = xc * (dtc * decay_out)[..., None]
+        h = h * jnp.exp(seg)[..., None, None] + jnp.einsum("blhp,blhn->bhpn", xw, bc)
+        return h, y
+
+    h0 = (
+        jnp.zeros((Bsz, H, P, N), jnp.float32)
+        if init_state is None
+        else init_state.astype(jnp.float32)
+    )
+    xs = (
+        jnp.moveaxis(xf, 1, 0),
+        jnp.moveaxis(dtf, 1, 0),
+        jnp.moveaxis(Bf, 1, 0),
+        jnp.moveaxis(Cf, 1, 0),
+    )
+    hT, ys = jax.lax.scan(jax.checkpoint(body), h0, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(Bsz, S, H, P)
+    y = y + x.astype(jnp.float32) * D.astype(jnp.float32)[None, None, :, None]
+    return y.astype(x.dtype), hT
+
+
+def ssd(
+    x, dt, A, Bm, Cm, D, *, chunk: int = 64, impl: str = "auto", interpret: bool = False
+):
+    impl = _resolve(impl)
+    if impl == "pallas":
+        return _ssd_pallas(x, dt, A, Bm, Cm, D, chunk=chunk, interpret=interpret)
+    if impl == "naive":
+        return ref.ssd_ref(x, dt, A, Bm, Cm, D)
+    return _ssd_chunked_xla(x, dt, A, Bm, Cm, D, chunk=chunk)
+
+
+def ssd_decode_step(
+    x: jax.Array,      # (B, 1, H, P)
+    dt: jax.Array,     # (B, 1, H)
+    A: jax.Array,      # (H,)
+    Bm: jax.Array,     # (B, 1, G, N)
+    Cm: jax.Array,     # (B, 1, G, N)
+    D: jax.Array,      # (H,)
+    state: jax.Array,  # (B, H, P, N)
+) -> Tuple[jax.Array, jax.Array]:
+    """One recurrent SSD step (serving).  Returns (y (B,1,H,P), new_state)."""
+    H = x.shape[2]
+    G = Bm.shape[2]
+    group = H // G
+    xf = x[:, 0].astype(jnp.float32)               # (B,H,P)
+    dtf = dt[:, 0].astype(jnp.float32)             # (B,H)
+    bf = jnp.repeat(Bm[:, 0].astype(jnp.float32), group, axis=1)  # (B,H,N)
+    cf = jnp.repeat(Cm[:, 0].astype(jnp.float32), group, axis=1)
+    decay = jnp.exp(dtf * A.astype(jnp.float32)[None, :])[..., None, None]
+    upd = (dtf[..., None] * xf)[..., :, None] * bf[..., None, :]
+    new_state = state.astype(jnp.float32) * decay + upd
+    y = jnp.einsum("bhpn,bhn->bhp", new_state, cf)
+    y = y + xf * D.astype(jnp.float32)[None, :, None]
+    return y[:, None].astype(x.dtype), new_state.astype(state.dtype)

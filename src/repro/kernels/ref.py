@@ -1,0 +1,133 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+Each function here is the *semantic definition* the kernels are tested
+against (tests/test_kernels_*.py sweep shapes/dtypes and assert_allclose).
+These are written for clarity, not memory efficiency — the memory-bounded
+jnp implementations used in real compute paths live in ``ops.py``.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# --------------------------------------------------------------------- #
+# attention
+# --------------------------------------------------------------------- #
+def attention_ref(
+    q: jax.Array,          # (B, S, H, D)
+    k: jax.Array,          # (B, T, Hkv, D)
+    v: jax.Array,          # (B, T, Hkv, D)
+    *,
+    causal: bool = True,
+    window: int = 0,       # 0 = full
+    softcap: float = 0.0,
+    q_offset: int = 0,     # position of q[0] within the kv sequence (decode)
+) -> jax.Array:
+    B, S, H, D = q.shape
+    T, Hkv = k.shape[1], k.shape[2]
+    group = H // Hkv
+    kf = jnp.repeat(k, group, axis=2)  # (B, T, H, D)
+    vf = jnp.repeat(v, group, axis=2)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(D, jnp.float32))
+    s = jnp.einsum("bshd,bthd->bhst", q.astype(jnp.float32), kf.astype(jnp.float32)) * scale
+    if softcap > 0.0:
+        s = softcap * jnp.tanh(s / softcap)
+    q_pos = jnp.arange(S) + q_offset
+    k_pos = jnp.arange(T)
+    mask = jnp.ones((S, T), bool)
+    if causal:
+        mask &= k_pos[None, :] <= q_pos[:, None]
+    if window > 0:
+        mask &= k_pos[None, :] > (q_pos[:, None] - window)
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhst,bthd->bshd", p, vf.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+# --------------------------------------------------------------------- #
+# norms
+# --------------------------------------------------------------------- #
+def rmsnorm_ref(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps) * w.astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def layernorm_ref(
+    x: jax.Array, w: jax.Array, b: Optional[jax.Array], eps: float = 1e-5
+) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps) * w.astype(jnp.float32)
+    if b is not None:
+        y = y + b.astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# --------------------------------------------------------------------- #
+# fused cross-entropy:  loss_t = lse(h_t @ W) - (h_t @ W)[y_t]
+# --------------------------------------------------------------------- #
+def cross_entropy_ref(
+    hidden: jax.Array,     # (T, D)
+    w_out: jax.Array,      # (D, V)
+    targets: jax.Array,    # (T,) int32
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (per-token loss (T,), lse (T,)) in fp32."""
+    logits = hidden.astype(jnp.float32) @ w_out.astype(jnp.float32)  # (T, V)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    tgt = jnp.take_along_axis(logits, targets[:, None], axis=-1)[:, 0]
+    return lse - tgt, lse
+
+
+# --------------------------------------------------------------------- #
+# Mamba-2 SSD — sequential-scan oracle
+#   h_t = exp(dt_t * A) h_{t-1} + dt_t * B_t x_t^T    (per head)
+#   y_t = C_t . h_t + D x_t
+# --------------------------------------------------------------------- #
+def ssd_ref(
+    x: jax.Array,      # (B, S, H, P)
+    dt: jax.Array,     # (B, S, H)       (already softplus'd, >0)
+    A: jax.Array,      # (H,)            (negative)
+    Bm: jax.Array,     # (B, S, G, N)
+    Cm: jax.Array,     # (B, S, G, N)
+    D: jax.Array,      # (H,)
+    init_state: Optional[jax.Array] = None,  # (B, H, P, N)
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (y (B,S,H,P), final_state (B,H,P,N)). fp32 math."""
+    Bsz, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Bf = jnp.repeat(Bm.astype(jnp.float32), rep, axis=2)  # (B,S,H,N)
+    Cf = jnp.repeat(Cm.astype(jnp.float32), rep, axis=2)
+    Af = A.astype(jnp.float32)
+    h0 = (
+        jnp.zeros((Bsz, H, P, N), jnp.float32)
+        if init_state is None
+        else init_state.astype(jnp.float32)
+    )
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp  # (B,H,P),(B,H),(B,H,N),(B,H,N)
+        decay = jnp.exp(dtt * Af[None, :])[..., None, None]         # (B,H,1,1)
+        upd = (dtt[..., None] * xt)[..., :, None] * bt[..., None, :]  # (B,H,P,N)
+        h = h * decay + upd
+        y = jnp.einsum("bhpn,bhn->bhp", h, ct)
+        return h, y
+
+    xs = (
+        jnp.moveaxis(xf, 1, 0),
+        jnp.moveaxis(dtf, 1, 0),
+        jnp.moveaxis(Bf, 1, 0),
+        jnp.moveaxis(Cf, 1, 0),
+    )
+    hT, ys = jax.lax.scan(step, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1) + xf * D.astype(jnp.float32)[None, None, :, None]
+    return y.astype(x.dtype), hT

@@ -1,0 +1,158 @@
+"""Pallas TPU Mamba-2 SSD (state-space duality) chunked scan.
+
+The assigned SSM/hybrid architectures (mamba2-2.7b, jamba-1.5-large) spend
+their inner-loop FLOPs here.  GPU implementations lean on warp-level scans;
+the TPU-native formulation is the *chunked dual form* (arXiv:2405.21060),
+which converts the recurrence into MXU-friendly matmuls:
+
+  per (batch, head), grid innermost over chunks of length L (sequential on
+  TPU, so the (P × N) inter-chunk state lives in VMEM scratch and is carried
+  across grid steps — no HBM round-trips for the recurrent state):
+
+    intra-chunk:  Y_intra = ((C B^T) ∘ decay_mask) X        (L×L quadratic)
+    state in:     Y_state = (C h_in) ∘ decay_in
+    state update: h_out   = h_in·exp(seg_sum) + (dt·X)^T (B ∘ decay_out)
+
+  All matmuls are (L × N)·(N × L), (L × L)·(L × P), (P × L)·(L × N) — MXU
+  shapes; L=64/128 and N=128, P=64 are hardware-aligned.
+
+VMEM per step ≈ L·(P+2N+2) + P·N fp32 ≈ 0.2 MB at L=128,P=64,N=128.
+
+Oracle: ``ref.ssd_ref`` (pure sequential scan).  The jnp chunked
+implementation used in the training path lives in ``ops.py``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+
+def _ssd_kernel(
+    x_ref,      # (1, L, 1, P)
+    dt_ref,     # (1, L, 1)
+    a_ref,      # (1,)
+    b_ref,      # (1, L, 1, N)
+    c_ref,      # (1, L, 1, N)
+    d_ref,      # (1,)
+    y_ref,      # (1, L, 1, P)
+    hout_ref,   # (1, 1, P, N)  final state
+    h_scr,      # VMEM (P, N) carried state
+    *,
+    L: int,
+    n_chunks: int,
+):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)     # (L, P)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)      # (L,)
+    a = a_ref[0].astype(jnp.float32)              # scalar
+    bm = b_ref[0, :, 0, :].astype(jnp.float32)    # (L, N)
+    cm = c_ref[0, :, 0, :].astype(jnp.float32)    # (L, N)
+    dsc = d_ref[0].astype(jnp.float32)
+
+    da = dt * a                                   # (L,) decay log-increments
+    cum = jnp.cumsum(da)                          # inclusive cumsum
+    seg = cum[-1]
+
+    # intra-chunk quadratic term: decay(t<-s) = exp(cum_t - cum_s) for s<=t
+    diff = cum[:, None] - cum[None, :]            # (L, L)
+    causal = (
+        jax.lax.broadcasted_iota(jnp.int32, (L, L), 0)
+        >= jax.lax.broadcasted_iota(jnp.int32, (L, L), 1)
+    )
+    decay_mat = jnp.where(causal, jnp.exp(diff), 0.0)
+    scores = jax.lax.dot_general(
+        cm, bm, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )                                              # (L, L)  C_t · B_s
+    att = scores * decay_mat * dt[None, :]         # weight by dt_s
+    y = jax.lax.dot_general(
+        att, x, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )                                              # (L, P)
+
+    # contribution of the carried inter-chunk state
+    h_in = h_scr[...]                              # (P, N)
+    decay_in = jnp.exp(cum)[:, None]               # (L, 1)
+    y += jax.lax.dot_general(
+        cm * decay_in, h_in, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                              # (L, P)
+
+    # state update: h_out = h_in * exp(seg) + sum_s exp(seg - cum_s) dt_s x_s B_s^T
+    decay_out = jnp.exp(seg - cum)                 # (L,)
+    xw = x * (dt * decay_out)[:, None]             # (L, P)
+    h_new = h_in * jnp.exp(seg) + jax.lax.dot_general(
+        xw, bm, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )                                              # (P, N)
+    h_scr[...] = h_new
+
+    y_ref[0, :, 0, :] = (y + x * dsc).astype(y_ref.dtype)
+
+    @pl.when(ci == n_chunks - 1)
+    def _final():
+        hout_ref[0, 0] = h_new.astype(hout_ref.dtype)
+
+
+def ssd_scan(
+    x: jax.Array,    # (B, S, H, P)
+    dt: jax.Array,   # (B, S, H)  positive
+    A: jax.Array,    # (H,) negative
+    Bm: jax.Array,   # (B, S, G, N)
+    Cm: jax.Array,   # (B, S, G, N)
+    D: jax.Array,    # (H,)
+    *,
+    chunk: int = 64,
+    interpret: bool = False,
+):
+    """Returns (y (B,S,H,P), final_state (B,H,P,N))."""
+    B, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    group = H // G
+    chunk = min(chunk, S)
+    assert S % chunk == 0, (S, chunk)
+    n_chunks = S // chunk
+
+    kernel = functools.partial(_ssd_kernel, L=chunk, n_chunks=n_chunks)
+
+    def xmap(b, h, ci):
+        return (b, ci, h, 0)
+
+    def dtmap(b, h, ci):
+        return (b, ci, h)
+
+    def bcmap(b, h, ci):
+        return (b, ci, h // group, 0)
+
+    def amap(b, h, ci):
+        return (h,)
+
+    y, hout = pl.pallas_call(
+        kernel,
+        grid=(B, H, n_chunks),
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, P), xmap),
+            pl.BlockSpec((1, chunk, 1), dtmap),
+            pl.BlockSpec((1,), amap),
+            pl.BlockSpec((1, chunk, 1, N), bcmap),
+            pl.BlockSpec((1, chunk, 1, N), bcmap),
+            pl.BlockSpec((1,), amap),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, 1, P), xmap),
+            pl.BlockSpec((1, 1, P, N), lambda b, h, ci: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S, H, P), x.dtype),
+            jax.ShapeDtypeStruct((B, H, P, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A, Bm, Cm, D)
+    return y, hout

@@ -1,0 +1,287 @@
+"""Scan-aware HLO cost extraction.
+
+XLA's ``compiled.cost_analysis()`` counts a ``while`` body ONCE, so any
+scan-over-layers module under-reports FLOPs / bytes / collectives by the
+trip count.  This module re-derives the three roofline inputs directly from
+the compiled HLO text, walking the computation call graph with multipliers
+from ``backend_config={"known_trip_count":{"n":...}}``:
+
+  * flops            — 2 · prod(result_dims) · prod(contracting_dims) per
+                       ``dot`` (MXU ops dominate; elementwise ignored)
+  * hbm_bytes        — per *top-level* instruction: operand + result buffer
+                       sizes (XLA's own traffic model), skipping
+                       composite/no-traffic ops and fusion-internal ops
+  * collective bytes — result-buffer bytes per collective × ring factor
+
+Operand shapes are resolved through a per-computation symbol table (HLO
+text prints operand *names*, not types).  Validated against
+cost_analysis() on unrolled modules (tests/test_dryrun_small.py).
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, List, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+    "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+    "c64": 8, "c128": 16,
+}
+_SHAPE_RE = re.compile(
+    r"(f64|f32|bf16|f16|f8\w*|s64|u64|s32|u32|s16|u16|s8|u8|pred|c64|c128)"
+    r"\[([0-9,]*)\]"
+)
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*((?:\([^={]*\)|\S+))\s+([\w\-]+)\((.*)$"
+)
+_WHILE_RE = re.compile(
+    r"while\(.*?body=%?([\w.\-]+).*?known_trip_count\":\{\"n\":\"(\d+)\"",
+)
+_CALL_RE = re.compile(r"(?:calls|to_apply|body|condition)=%?([\w.\-]+)")
+_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_DOT_DIMS_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+_SKIP_MEM = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "while", "conditional", "call",
+    "get-dimension-size", "partition-id", "replica-id",
+    "rng-get-and-update-state", "iota",
+}
+_COLLECTIVES = {
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+}
+_COLL_FACTOR = {
+    "all-gather": 1.0, "all-reduce": 2.0, "reduce-scatter": 1.0,
+    "all-to-all": 1.0, "collective-permute": 1.0,
+}
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        size = 1
+        if dims:
+            for d in dims.split(","):
+                size *= int(d)
+        total += size * (1 if dt.startswith("f8") else _DTYPE_BYTES.get(dt, 2))
+    return total
+
+
+def _type_dims(type_str: str) -> List[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",")] if m.group(2) else []
+
+
+def split_computations(txt: str) -> Tuple[Dict[str, List[str]], str]:
+    comps: Dict[str, List[str]] = {}
+    entry = ""
+    cur = None
+    for line in txt.splitlines():
+        if line and not line[0].isspace() and "{" in line and "(" in line:
+            m = re.match(r"(ENTRY\s+)?%?([\w.\-]+)\s*\(", line)
+            if m:
+                cur = m.group(2)
+                comps[cur] = []
+                if m.group(1):
+                    entry = cur
+                continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        if cur is not None:
+            comps[cur].append(line)
+    return comps, entry
+
+
+def _multipliers(comps: Dict[str, List[str]], entry: str) -> Dict[str, float]:
+    mult: Dict[str, float] = {c: 0.0 for c in comps}
+    if entry not in comps:
+        return {c: 1.0 for c in comps}
+    mult[entry] = 1.0
+    for _ in range(64):  # call graph is a DAG; fixpoint in few passes
+        changed = False
+        for c, lines in comps.items():
+            if mult[c] == 0.0:
+                continue
+            for line in lines:
+                trips: Dict[str, int] = {}
+                wm = _WHILE_RE.search(line)
+                if wm:
+                    trips[wm.group(1)] = int(wm.group(2))
+                for callee in _CALL_RE.findall(line):
+                    if callee not in comps:
+                        continue
+                    want = mult[c] * trips.get(callee, 1)
+                    if mult[callee] < want:
+                        mult[callee] = want
+                        changed = True
+                bm = _BRANCH_RE.search(line)
+                if bm:
+                    for b in re.findall(r"%?([\w.\-]+)", bm.group(1)):
+                        if b in comps and mult[b] < mult[c]:
+                            mult[b] = mult[c]
+                            changed = True
+        if not changed:
+            break
+    return mult
+
+
+def _fusion_bodies(comps: Dict[str, List[str]]) -> set:
+    bodies = set()
+    for lines in comps.values():
+        for line in lines:
+            if " fusion(" in line:
+                m = re.search(r"calls=%?([\w.\-]+)", line)
+                if m:
+                    bodies.add(m.group(1))
+    return bodies
+
+
+def _inplace_fusion_traffic(comps: Dict[str, List[str]]) -> Dict[str, float]:
+    """Fusion bodies rooted at dynamic-(update-)slice are in-place: their
+    real traffic is the SLICE, not the full (possibly scan-stacked) buffer.
+    Returns body-name -> traffic bytes override (0 means 'use default')."""
+    out: Dict[str, float] = {}
+    for cname, lines in comps.items():
+        table = _symbols(lines)
+        for line in lines:
+            if not line.lstrip().startswith("ROOT"):
+                continue
+            m = _INSTR_RE.match(line)
+            if not m:
+                continue
+            name, rt, op, rest = m.groups()
+            if op == "dynamic-update-slice":
+                ops_names = _OPERAND_RE.findall(rest.split(")")[0])
+                upd = table.get(ops_names[1], "") if len(ops_names) > 1 else ""
+                out[cname] = 2.0 * _type_bytes(upd)
+            elif op == "dynamic-slice":
+                out[cname] = 2.0 * _type_bytes(rt)
+    return out
+
+
+def _symbols(lines: List[str]) -> Dict[str, str]:
+    """instruction name -> result type string (per computation)."""
+    table: Dict[str, str] = {}
+    for line in lines:
+        m = _INSTR_RE.match(line)
+        if m:
+            table[m.group(1)] = m.group(2)
+    # computation parameters appear in the header, not handled here; HLO
+    # text also declares them as explicit parameter instructions, covered.
+    return table
+
+
+def analyze(txt: str, breakdown: bool = False) -> Dict[str, Any]:
+    comps, entry = split_computations(txt)
+    mult = _multipliers(comps, entry)
+    fusion_bodies = _fusion_bodies(comps)
+    inplace = _inplace_fusion_traffic(comps)
+
+    flops = 0.0
+    hbm = 0.0
+    hbm_f32_large = 0.0  # traffic of >=1MB fp32 buffers: XLA-CPU computes
+    # bf16 dots/fusions in fp32 (no native bf16 matmul); on the TPU target
+    # these buffers are bf16 — roofline reports a TPU-adjusted memory term.
+    coll: Dict[str, Dict[str, float]] = {}
+    by_shape: Dict[str, float] = {}
+
+    for cname, lines in comps.items():
+        w = mult.get(cname, 0.0)
+        if w == 0.0:
+            continue
+        in_fusion = cname in fusion_bodies
+        table = _symbols(lines)
+        for line in lines:
+            m = _INSTR_RE.match(line)
+            if not m:
+                continue
+            name, result_type, op, rest = m.groups()
+            base = op.replace("-start", "").replace("-done", "")
+
+            if base == "dot":
+                res = _type_dims(result_type)
+                # lhs operand: first %name inside the paren args
+                args_part = rest.split(")")[0]
+                ops_names = _OPERAND_RE.findall(args_part)
+                lhs = _type_dims(table.get(ops_names[0], "")) if ops_names else []
+                cd = _DOT_DIMS_RE.search(line)
+                csize = 1
+                if cd and cd.group(1):
+                    for d in cd.group(1).split(","):
+                        if int(d) < len(lhs):
+                            csize *= lhs[int(d)]
+                rsize = 1
+                for d in res:
+                    rsize *= d
+                flops += w * 2.0 * rsize * csize
+
+            if in_fusion:
+                continue
+            if base in _SKIP_MEM or op.endswith("-done"):
+                continue
+
+            args_part = rest.split(")")[0]
+            operands = _OPERAND_RE.findall(args_part)
+            if base == "fusion":
+                cm = re.search(r"calls=%?([\w.\-]+)", line)
+                if cm and cm.group(1) in inplace:
+                    io = inplace[cm.group(1)]
+                    if base in _COLLECTIVES:
+                        pass
+                    hbm += w * io
+                    sm = _SHAPE_RE.search(result_type)
+                    if (
+                        sm and sm.group(1) == "f32"
+                        and _type_bytes(sm.group(0)) >= 1 << 20
+                    ):
+                        hbm_f32_large += w * io
+                    if breakdown and io > 0:
+                        sig = f"fusion-inplace:{sm.group(0) if sm else '?'}"
+                        by_shape[sig] = by_shape.get(sig, 0.0) + w * io
+                    continue
+            if base in ("dynamic-slice", "slice", "gather"):
+                # traffic = slice read + result write, NOT the full operand
+                io_bytes = 2 * _type_bytes(result_type)
+            elif base in ("dynamic-update-slice", "scatter"):
+                # traffic = update read + region write (+ small indices)
+                upd = table.get(operands[1], "") if len(operands) > 1 else ""
+                io_bytes = 2 * _type_bytes(upd)
+            elif base == "broadcast":
+                io_bytes = _type_bytes(result_type)
+            else:
+                operand_bytes = sum(_type_bytes(table.get(o, "")) for o in operands)
+                io_bytes = _type_bytes(result_type) + operand_bytes
+
+            if base in _COLLECTIVES:
+                nbytes = _type_bytes(result_type)
+                rec = coll.setdefault(
+                    base, {"count": 0, "bytes": 0.0, "traffic": 0.0}
+                )
+                rec["count"] += w
+                rec["bytes"] += w * nbytes
+                rec["traffic"] += w * nbytes * _COLL_FACTOR[base]
+            hbm += w * io_bytes
+            sm = _SHAPE_RE.search(result_type)
+            if sm and sm.group(1) == "f32" and _type_bytes(sm.group(0)) >= 1 << 20:
+                hbm_f32_large += w * io_bytes
+            if breakdown and io_bytes > 0:
+                sig = f"{base}:{sm.group(0) if sm else '?'}"
+                by_shape[sig] = by_shape.get(sig, 0.0) + w * io_bytes
+
+    out: Dict[str, Any] = {
+        "flops": flops,
+        "hbm_bytes": hbm,
+        "hbm_bytes_f32_large": hbm_f32_large,
+        "collectives": coll,
+    }
+    if breakdown:
+        out["traffic_top"] = dict(
+            sorted(by_shape.items(), key=lambda kv: -kv[1])[:15]
+        )
+    return out

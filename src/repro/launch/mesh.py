@@ -1,0 +1,25 @@
+"""Production meshes.
+
+``make_production_mesh`` is a FUNCTION (not a module constant) so importing
+this module never touches jax device state.  Shapes:
+
+  single-pod:  (16, 16)      axes (data, model)        — 256 chips (v5e pod)
+  multi-pod:   (2, 16, 16)   axes (pod, data, model)   — 512 chips
+
+The `model` axis stays intra-pod (ICI); `pod` carries only data-parallel
+gradient all-reduce (+ optional FSDP, see ParallelConfig.fsdp_axes).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(shape=(2, 4), axes=("data", "model")):
+    """Small mesh for 8-host-device integration tests."""
+    return jax.make_mesh(shape, axes)

@@ -1,0 +1,183 @@
+"""Assigned input shapes + ShapeDtypeStruct stand-ins for every model input.
+
+``input_specs`` builds weak-type-correct, shardable abstract inputs (no
+device allocation) for each (arch × shape × step-kind); ``dryrun_bundle``
+packages (fn, abstract args, in_shardings) ready for ``jit(...).lower()``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec
+
+from repro.core.config import ModelConfig, ParallelConfig, TrainConfig
+from repro.models.model import Model, build_model
+from repro.parallel.sharding import axis_rules, spec
+
+
+@dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES: Dict[str, InputShape] = {
+    "train_4k": InputShape("train_4k", 4096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524288, 1, "decode"),
+    # the paper's own pretraining workloads (BioNeMo recipes)
+    "mlm_1k": InputShape("mlm_1k", 1024, 2048, "train"),      # ESM-2 recipe
+    "mlm_2k": InputShape("mlm_2k", 2048, 1024, "train"),      # Geneformer
+}
+
+# archs that legitimately run long_500k (sub-quadratic decode memory/compute)
+LONG_OK_FAMILIES = ("ssm", "hybrid")
+
+
+def applicable(cfg: ModelConfig, shape: InputShape) -> Tuple[bool, str]:
+    if shape.name != "long_500k":
+        return True, ""
+    if cfg.family in LONG_OK_FAMILIES:
+        return True, "ssm/hybrid state decode"
+    if cfg.sliding_window:
+        return True, f"sliding-window {cfg.sliding_window} decode cache"
+    return False, (
+        "pure full-attention arch: 500k-token decode cache is quadratic-"
+        "regime; skipped per DESIGN.md (run with --variant sliding_window "
+        "to force a windowed variant)"
+    )
+
+
+def _i32(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def _f(shape, dt=jnp.bfloat16):
+    return jax.ShapeDtypeStruct(shape, dt)
+
+
+def train_batch_specs(cfg: ModelConfig, shape: InputShape):
+    B, S = shape.global_batch, shape.seq_len
+    batch: Dict[str, Any] = {}
+    if cfg.frontend == "vision_stub":
+        batch["tokens"] = _i32((B, S - cfg.num_frontend_tokens))
+        batch["img_embeds"] = _f((B, cfg.num_frontend_tokens, cfg.d_model))
+    elif cfg.frontend == "audio_stub":
+        batch["tokens"] = _i32((B, S))
+        batch["enc_embeds"] = _f((B, cfg.num_frontend_tokens, cfg.d_model))
+    elif cfg.is_encoder_decoder:
+        batch["tokens"] = _i32((B, S))
+        batch["src_tokens"] = _i32((B, S))
+    elif cfg.objective == "mlm":
+        batch["tokens"] = _i32((B, S))
+        batch["targets"] = _i32((B, S))
+        batch["loss_mask"] = _f((B, S), jnp.float32)
+    else:
+        batch["tokens"] = _i32((B, S))
+    return batch
+
+
+def batch_shardings(cfg, shape: InputShape, mesh, rules) -> Any:
+    b_ax = rules.get("batch")
+
+    def sh(sds):
+        nd = len(sds.shape)
+        if nd == 0:
+            return NamedSharding(mesh, PartitionSpec())
+        return NamedSharding(mesh, PartitionSpec(b_ax, *([None] * (nd - 1))))
+
+    return jax.tree.map(sh, train_batch_specs(cfg, shape))
+
+
+def _cache_sharding_tree(model: Model, cache_abs, mesh, rules, wide_seq: bool):
+    """Sharding for the decode cache pytree (stacked over scan units)."""
+    batch_ax = rules.get("batch")
+    seq_ax = ("data", "model") if wide_seq else rules.get("cache_seq")
+    model_ax = rules.get("tp")
+    b_ax = None if wide_seq else batch_ax  # batch=1 cannot shard
+
+    def walk(tree, keys=()):
+        if isinstance(tree, dict):
+            return {k: walk(v, keys + (k,)) for k, v in tree.items()}
+        nd = len(tree.shape)
+        if "xattn" in keys:
+            if keys[-1] in ("k", "v"):
+                return NamedSharding(mesh, PartitionSpec(None, b_ax))
+            return NamedSharding(mesh, PartitionSpec(None, b_ax))
+        if keys[-1] in ("k", "v"):       # (units, B, T, Hkv, hd)
+            return NamedSharding(mesh, PartitionSpec(None, b_ax, seq_ax))
+        if keys[-1] == "state":          # (units, B, H, P, N)
+            return NamedSharding(mesh, PartitionSpec(None, b_ax, model_ax))
+        if keys[-1] == "conv":           # (units, B, kw-1, conv_dim)
+            return NamedSharding(mesh, PartitionSpec(None, b_ax, None, model_ax))
+        if keys[-1] == "len":
+            return NamedSharding(mesh, PartitionSpec(None, b_ax))
+        if keys[-1] == "pos":
+            return NamedSharding(mesh, PartitionSpec())
+        return NamedSharding(mesh, PartitionSpec())
+
+    return walk(cache_abs)
+
+
+def dryrun_bundle(
+    cfg: ModelConfig,
+    shape: InputShape,
+    mesh,
+    pc: ParallelConfig,
+    tc: Optional[TrainConfig] = None,
+):
+    """Returns (fn, abstract_args tuple, in_shardings tuple, meta dict)."""
+    from repro.training import train_step as TS
+
+    model = build_model(cfg, pc, mesh)
+    rules = model.ctx.rules
+    tc = tc or TrainConfig(global_batch=shape.global_batch, seq_len=shape.seq_len)
+
+    if shape.kind == "train":
+        state_abs = TS.abstract_train_state(model)
+        state_specs = TS.train_state_specs(model)
+        state_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), state_specs)
+        batch_abs = train_batch_specs(cfg, shape)
+        batch_sh = batch_shardings(cfg, shape, mesh, rules)
+        fn = TS.make_train_step(model, tc)
+        return fn, (state_abs, batch_abs), (state_sh, batch_sh), {"model": model}
+
+    params_abs = model.abstract_params()
+    params_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), model.param_specs())
+
+    if shape.kind == "prefill":
+        batch_abs = train_batch_specs(cfg, shape)
+        batch_abs.pop("targets", None)
+        batch_abs.pop("loss_mask", None)
+        batch_sh = batch_shardings(cfg, shape, mesh, rules)
+        batch_sh = {k: batch_sh[k] for k in batch_abs}
+        max_len = shape.seq_len
+        fn = TS.make_prefill_step(model, max_len)
+        return fn, (params_abs, batch_abs), (params_sh, batch_sh), {"model": model}
+
+    # decode: one new token against a seq_len cache
+    B = shape.global_batch
+    cross_len = cfg.num_frontend_tokens if cfg.is_encoder_decoder else 0
+    cache_abs = jax.eval_shape(
+        lambda: model.init_cache(B, shape.seq_len, cross_len=cross_len)
+    )
+    wide = shape.global_batch == 1
+    cache_sh = _cache_sharding_tree(model, cache_abs, mesh, rules, wide)
+    tok_abs = _i32((B, 1))
+    tok_sh = NamedSharding(
+        mesh, PartitionSpec(rules.get("batch")) if not wide else PartitionSpec()
+    )
+    fn = TS.make_decode_step(model)
+    return (
+        fn,
+        (params_abs, cache_abs, tok_abs),
+        (params_sh, cache_sh, tok_sh),
+        {"model": model},
+    )

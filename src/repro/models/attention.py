@@ -1,0 +1,177 @@
+"""GQA attention with context-parallel / head-TP activation sharding,
+KV caching (prefill + decode), sliding window, and optional cross-attention.
+
+Cache layout: {"k": (B, T, Hkv, D), "v": (B, T, Hkv, D)} with the sequence
+dim logically ``cache_seq`` (sharded over `model` when enabled — decode then
+lowers to flash-decoding-style partial-stat all-reduces, see ops.decode_attention).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import ModelConfig
+from repro.core.module import P
+from repro.kernels import ops
+from repro.models.layers import rope
+from repro.parallel.sharding import ShardingCtx
+
+
+def attention_defs(cfg: ModelConfig, cross: bool = False) -> Dict[str, P]:
+    d = cfg.d_model
+    hd = cfg.resolved_head_dim
+    nq, nkv = cfg.num_heads, cfg.num_kv_heads
+    defs: Dict[str, P] = {
+        "wq": P((d, nq * hd), ("fsdp", "tp"), fan_in=d),
+        "wk": P((d, nkv * hd), ("fsdp", "tp"), fan_in=d),
+        "wv": P((d, nkv * hd), ("fsdp", "tp"), fan_in=d),
+        "wo": P((nq * hd, d), ("tp", "fsdp"), fan_in=nq * hd),
+    }
+    if cfg.qkv_bias:
+        defs["bq"] = P((nq * hd,), ("tp",), init="zeros")
+        defs["bk"] = P((nkv * hd,), ("tp",), init="zeros")
+        defs["bv"] = P((nkv * hd,), ("tp",), init="zeros")
+    if cfg.attn_out_bias:
+        defs["bo"] = P((d,), (None,), init="zeros")
+    return defs
+
+
+def _project_qkv(cfg, params, x, kv_src=None):
+    """Returns q (B,S,H,D), k, v (B,T,Hkv,D)."""
+    cdt = x.dtype
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim
+    src = x if kv_src is None else kv_src
+    T = src.shape[1]
+    q = x @ params["wq"].astype(cdt)
+    k = src @ params["wk"].astype(cdt)
+    v = src @ params["wv"].astype(cdt)
+    if "bq" in params:
+        q = q + params["bq"].astype(cdt)
+        k = k + params["bk"].astype(cdt)
+        v = v + params["bv"].astype(cdt)
+    q = q.reshape(B, S, cfg.num_heads, hd)
+    k = k.reshape(B, T, cfg.num_kv_heads, hd)
+    v = v.reshape(B, T, cfg.num_kv_heads, hd)
+    return q, k, v
+
+
+def _out_proj(cfg, ctx: ShardingCtx, params, o: jax.Array) -> jax.Array:
+    B, S = o.shape[:2]
+    cdt = o.dtype
+    o = o.reshape(B, S, cfg.num_heads * cfg.resolved_head_dim)
+    out = o @ params["wo"].astype(cdt)
+    if "bo" in params:
+        out = out + params["bo"].astype(cdt)
+    return out
+
+
+def attention_apply(
+    cfg: ModelConfig,
+    ctx: ShardingCtx,
+    params: Dict[str, Any],
+    x: jax.Array,                       # (B, S, d_model)
+    *,
+    positions: Optional[jax.Array] = None,
+    mode: str = "train",                # train | prefill | decode
+    cache: Optional[Dict[str, jax.Array]] = None,
+    cache_pos: Optional[jax.Array] = None,   # scalar int32 (decode write idx)
+    causal: Optional[bool] = None,
+    cross_kv: Optional[jax.Array] = None,    # encoder output for cross-attn
+    window: Optional[int] = None,
+) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    B, S, _ = x.shape
+    causal = cfg.causal if causal is None else causal
+    window = cfg.sliding_window if window is None else window
+    is_cross = cross_kv is not None
+
+    if mode == "decode" and (is_cross or (cache is not None and "len" in cache)):
+        # cross-attention KV was precomputed at prefill time and lives in cache
+        q, _, _ = _project_qkv(cfg, params, x, kv_src=x[:, :0])
+        if cfg.use_rope:
+            pass  # no rope on cross-attention
+        k, v = cache["k"], cache["v"]
+        lengths = cache["len"]
+        o = ops.decode_attention(q, k, v, lengths, softcap=cfg.attn_logit_softcap)
+        return _out_proj(cfg, ctx, params, o), cache
+
+    q, k, v = _project_qkv(cfg, params, x, kv_src=cross_kv)
+
+    if cfg.use_rope and not is_cross:
+        if positions is None:
+            if mode == "decode":
+                if jnp.ndim(cache_pos) == 0:
+                    positions = jnp.full((S,), cache_pos, jnp.int32)
+                else:
+                    positions = cache_pos[:, None].astype(jnp.int32)  # (B,1)
+            else:
+                positions = jnp.arange(S)
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+
+    if mode == "decode":
+        assert cache is not None and cache_pos is not None
+        # window caches are rolling: write at cache_pos % T
+        T = cache["k"].shape[1]
+        rolling = bool(window) and window <= T
+        if jnp.ndim(cache_pos) == 0:
+            widx = cache_pos % T if rolling else cache_pos
+            k_cache = jax.lax.dynamic_update_slice(
+                cache["k"], k.astype(cache["k"].dtype), (0, widx, 0, 0)
+            )
+            v_cache = jax.lax.dynamic_update_slice(
+                cache["v"], v.astype(cache["v"].dtype), (0, widx, 0, 0)
+            )
+            lengths = jnp.minimum(
+                jnp.full((B,), cache_pos + 1, jnp.int32), jnp.int32(T)
+            )
+        else:
+            # per-slot positions (continuous-batching engine): masked write.
+            # O(B·T) traffic — fine at serving batch sizes; a paged cache /
+            # Pallas scatter is the production path (see serving/engine.py).
+            widx = (cache_pos % T) if rolling else cache_pos     # (B,)
+            onehot = (
+                jnp.arange(T)[None, :] == widx[:, None]
+            )[..., None, None]                                    # (B,T,1,1)
+            k_cache = jnp.where(onehot, k.astype(cache["k"].dtype), cache["k"])
+            v_cache = jnp.where(onehot, v.astype(cache["v"].dtype), cache["v"])
+            lengths = jnp.minimum(cache_pos + 1, jnp.int32(T))
+        k_cache = ctx.cons(k_cache, "cache_batch", "cache_seq")
+        v_cache = ctx.cons(v_cache, "cache_batch", "cache_seq")
+        o = ops.decode_attention(
+            q, k_cache, v_cache, lengths, softcap=cfg.attn_logit_softcap
+        )
+        new_cache = {"k": k_cache, "v": v_cache}
+        return _out_proj(cfg, ctx, params, o), new_cache
+
+    # train / prefill: blockwise attention over the full (or encoder) sequence
+    if ctx.context_parallel and not is_cross:
+        q = ctx.cons(q, "batch", "seq_cp")
+        # GQA KV is small: gather it fully (llama3-style CP)
+        k = ctx.cons(k, "batch", None)
+        v = ctx.cons(v, "batch", None)
+    o = ops.attention(
+        q, k, v,
+        causal=causal and not is_cross,
+        window=window,
+        softcap=cfg.attn_logit_softcap,
+    )
+    out = _out_proj(cfg, ctx, params, o)
+
+    new_cache = None
+    if mode == "prefill" and not is_cross:
+        new_cache = {"k": k, "v": v}
+    return out, new_cache
+
+
+def init_cache(
+    cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16
+) -> Dict[str, jax.Array]:
+    hd = cfg.resolved_head_dim
+    T = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+    return {
+        "k": jnp.zeros((batch, T, cfg.num_kv_heads, hd), dtype),
+        "v": jnp.zeros((batch, T, cfg.num_kv_heads, hd), dtype),
+    }

@@ -1,0 +1,276 @@
+"""Top-level model: param tree assembly + train/prefill/decode entry points.
+
+``Model`` is the single public handle the launcher, trainer, server, tests
+and dry-run all use.  It is architecture-generic: the config decides dense /
+MoE / SSM / hybrid / enc-dec / frontend-stub wiring.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import ModelConfig, ParallelConfig
+from repro.core.module import P, abstract, materialize, spec_tree
+from repro.core.precision import policy_for
+from repro.kernels import ops
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.parallel.sharding import ShardingCtx, null_ctx
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig, ctx: Optional[ShardingCtx] = None):
+        self.cfg = cfg
+        self.ctx = ctx if ctx is not None else null_ctx()
+        self.policy = policy_for(cfg)
+
+    # ------------------------------------------------------------ params
+    def param_defs(self) -> Dict[str, Any]:
+        cfg = self.cfg
+        defs: Dict[str, Any] = {
+            "embed": L.embedding_defs(cfg),
+            "layers": T.stack_defs(cfg, cross=cfg.is_encoder_decoder),
+            "final_norm": L.norm_defs(cfg, cfg.d_model),
+            "head": L.lm_head_defs(cfg),
+        }
+        if cfg.is_encoder_decoder:
+            import dataclasses
+
+            enc_cfg = dataclasses.replace(
+                cfg,
+                family="dense",
+                num_layers=cfg.encoder_layers,
+                num_experts=0,
+                causal=False,
+                is_encoder_decoder=False,
+            )
+            self._enc_cfg = enc_cfg
+            defs["encoder"] = {
+                "layers": T.stack_defs(enc_cfg),
+                "final_norm": L.norm_defs(enc_cfg, cfg.d_model),
+            }
+            if cfg.frontend == "audio_stub" and cfg.max_pos:
+                defs["encoder"]["pos"] = P(
+                    (cfg.max_pos, cfg.d_model), (None, "fsdp"), init="normal", scale=0.02
+                )
+        if cfg.frontend == "vision_stub":
+            # projector from (stub) vision embeddings into the LM stream
+            defs["projector"] = {
+                "w": P((cfg.d_model, cfg.d_model), ("fsdp", "tp"), fan_in=cfg.d_model),
+                "b": P((cfg.d_model,), (None,), init="zeros"),
+            }
+        return defs
+
+    def init(self, key: jax.Array):
+        return materialize(self.param_defs(), key, self.policy.pdt)
+
+    def abstract_params(self):
+        return abstract(self.param_defs(), self.policy.pdt)
+
+    def param_specs(self):
+        return spec_tree(self.param_defs(), self.ctx.rules)
+
+    # ------------------------------------------------------------ encoder
+    def _encode(self, params, batch) -> jax.Array:
+        """Run the encoder (enc-dec archs).  Input: precomputed frame
+        embeddings (audio stub) or source tokens (seq2seq)."""
+        cfg = self.cfg
+        cdt = self.policy.cdt
+        if "enc_embeds" in batch:  # audio stub: (B, T_enc, d_model)
+            x = batch["enc_embeds"].astype(cdt)
+            pos = params["encoder"].get("pos")
+            if pos is not None:
+                x = x + pos[: x.shape[1]].astype(cdt)[None]
+        else:
+            x = L.embed_apply(cfg, self.ctx, params["embed"], batch["src_tokens"],
+                              compute_dtype=cdt)
+        enc_cfg = getattr(self, "_enc_cfg", None)
+        if enc_cfg is None:
+            self.param_defs()  # populates _enc_cfg
+            enc_cfg = self._enc_cfg
+        x, _, _ = T.decoder_stack(
+            enc_cfg, self.ctx, params["encoder"]["layers"], x,
+            mode="train", causal=False,
+        )
+        return L.norm_apply(cfg, params["encoder"]["final_norm"], x)
+
+    # ------------------------------------------------------------ backbone
+    def _decoder_input(self, params, batch, mode: str) -> Tuple[jax.Array, Any]:
+        cfg = self.cfg
+        cdt = self.policy.cdt
+        tokens = batch["tokens"]
+        x = L.embed_apply(cfg, self.ctx, params["embed"], tokens, compute_dtype=cdt)
+        if cfg.frontend == "vision_stub" and "img_embeds" in batch:
+            img = batch["img_embeds"].astype(cdt)
+            img = img @ params["projector"]["w"].astype(cdt) + params["projector"][
+                "b"
+            ].astype(cdt)
+            x = jnp.concatenate([img, x], axis=1)
+        if self.ctx.context_parallel and mode != "decode":
+            x = self.ctx.cons(x, "batch", "seq_cp", None)
+        else:
+            x = self.ctx.cons(x, "batch", None, None)
+        return x, None
+
+    def _backbone(
+        self, params, x, *, mode, positions=None, caches=None, cache_pos=None,
+        cross_kv=None,
+    ):
+        cfg = self.cfg
+        x, new_caches, aux = T.decoder_stack(
+            cfg, self.ctx, params["layers"], x,
+            mode=mode, positions=positions, caches=caches,
+            cache_pos=cache_pos, cross_kv=cross_kv,
+        )
+        x = L.norm_apply(cfg, params["final_norm"], x)
+        return x, new_caches, aux
+
+    def head_weight(self, params):
+        return L.lm_head_weight(self.cfg, params["head"], params["embed"])
+
+    def logits(self, params, hidden: jax.Array) -> jax.Array:
+        cfg = self.cfg
+        w = self.head_weight(params).astype(hidden.dtype)
+        lg = hidden @ w
+        if cfg.logit_softcap > 0:
+            lg = cfg.logit_softcap * jnp.tanh(lg / cfg.logit_softcap)
+        if cfg.padded_vocab != cfg.vocab_size:
+            # never sample/argmax into the Megatron vocab padding
+            pad_mask = jnp.arange(cfg.padded_vocab) < cfg.vocab_size
+            lg = jnp.where(pad_mask, lg, -1e30)
+        return lg
+
+    # ------------------------------------------------------------ training
+    def loss_fn(self, params, batch) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        cfg = self.cfg
+        cross_kv = self._encode(params, batch) if cfg.is_encoder_decoder else None
+        x, _, aux = self._backbone(
+            params,
+            self._decoder_input(params, batch, "train")[0],
+            mode="train",
+            cross_kv=cross_kv,
+        )
+        B, S, D = x.shape
+        hidden = x.reshape(B * S, D)
+        hidden = self.ctx.cons(hidden, "tokens", None)
+
+        if cfg.objective == "mlm":
+            targets = batch["targets"].reshape(-1)
+            mask = batch["loss_mask"].reshape(-1).astype(jnp.float32)
+        else:  # clm / seq2seq / vlm: next-token over text region
+            tokens = batch["tokens"]
+            n_front = cfg.num_frontend_tokens if cfg.frontend == "vision_stub" else 0
+            # hidden covers [front; text]; predict text token t+1 from position t
+            hidden = x[:, n_front:, :][:, :-1, :].reshape(-1, D)
+            hidden = self.ctx.cons(hidden, "tokens", None)
+            targets = tokens[:, 1:].reshape(-1)
+            mask = batch.get("loss_mask")
+            mask = (
+                mask[:, 1:].reshape(-1).astype(jnp.float32)
+                if mask is not None
+                else jnp.ones_like(targets, jnp.float32)
+            )
+
+        w_head = self.head_weight(params).astype(self.policy.cdt)
+        losses, _ = ops.cross_entropy(
+            hidden, w_head, targets, vocab=cfg.vocab_size
+        )
+        denom = jnp.maximum(mask.sum(), 1.0)
+        loss = (losses * mask).sum() / denom
+        metrics = {"ce_loss": loss, "aux_loss": aux, "tokens": denom}
+        if cfg.num_experts:
+            loss = loss + cfg.router_aux_coef * aux
+        return loss, metrics
+
+    # ------------------------------------------------------------ serving
+    def prefill(self, params, batch, max_len: int):
+        """Full-sequence forward; returns (last_logits, cache)."""
+        cfg = self.cfg
+        cross_kv = self._encode(params, batch) if cfg.is_encoder_decoder else None
+        x, _ = self._decoder_input(params, batch, "prefill")
+        S = x.shape[1]
+        x, caches, _ = self._backbone(
+            params, x, mode="prefill", cross_kv=cross_kv
+        )
+        caches = self._pad_caches(caches, S, max_len)
+        last = x[:, -1:, :]
+        lg = self.logits(params, last)
+        cache = {"layers": caches, "pos": jnp.int32(S)}
+        return lg, cache
+
+    def decode_step(self, params, cache, tokens: jax.Array):
+        """One-token step.  tokens: (B, 1).  ``cache["pos"]`` may be a
+        scalar (lockstep decoding) or a (B,) vector (continuous batching)."""
+        cfg = self.cfg
+        pos = cache["pos"]
+        vec = jnp.ndim(pos) > 0
+        emb_pos = None
+        if not cfg.use_rope and cfg.max_pos:
+            emb_pos = pos[:, None] if vec else pos[None]
+        x = L.embed_apply(
+            cfg, self.ctx, params["embed"], tokens,
+            positions=emb_pos, compute_dtype=self.policy.cdt,
+        )
+        x = self.ctx.cons(x, "batch", None, None)
+        rope_pos = None if vec else jnp.full((1,), pos, jnp.int32)
+        x, new_caches, _ = self._backbone(
+            params, x, mode="decode",
+            positions=rope_pos,
+            caches=cache["layers"], cache_pos=pos,
+        )
+        lg = self.logits(params, x)
+        return lg, {"layers": new_caches, "pos": pos + 1}
+
+    def init_cache(self, batch: int, max_len: int, cross_len: int = 0):
+        return {
+            "layers": T.init_stack_cache(
+                self.cfg, batch, max_len, self.policy.cdt, cross_len=cross_len
+            ),
+            "pos": jnp.int32(0),
+        }
+
+    # -------------------------------------------------------------- utils
+    def _pad_caches(self, caches, S: int, max_len: int):
+        """Place prefill KV (length S) into preallocated (rolling) buffers."""
+        cfg = self.cfg
+        W = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+
+        def pad_leaf(path_keys, leaf):
+            # only attn k/v leaves have a seq dim at axis 2 equal to S
+            if leaf.ndim >= 3 and leaf.shape[2] == S and any(
+                k in ("k", "v") for k in path_keys
+            ) and "xattn" not in path_keys:
+                if S <= W:
+                    buf = jnp.zeros((leaf.shape[0], leaf.shape[1], W, *leaf.shape[3:]),
+                                    leaf.dtype)
+                    return jax.lax.dynamic_update_slice(
+                        buf, leaf, (0,) * 2 + (0,) * (leaf.ndim - 2)
+                    )
+                # rolling placement: slot j holds token  S-W + ((j - S) % W)
+                slots = jnp.arange(W)
+                tok = S - W + ((slots - S) % W)
+                return jnp.take(leaf, tok, axis=2)
+            return leaf
+
+        def walk(tree, keys=()):
+            if isinstance(tree, dict):
+                return {k: walk(v, keys + (k,)) for k, v in tree.items()}
+            return pad_leaf(keys, tree)
+
+        return walk(caches)
+
+
+def build_model(
+    cfg: ModelConfig, pc: Optional[ParallelConfig] = None, mesh=None
+) -> Model:
+    pc = pc or ParallelConfig()
+    if mesh is not None:
+        tp = dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1)
+        pc = pc.validate(cfg, tp)
+        ctx = ShardingCtx(mesh, pc)
+    else:
+        ctx = ShardingCtx(None, pc)
+    return Model(cfg, ctx)

@@ -1,0 +1,145 @@
+"""Mixture-of-Experts FFN — GShard-style capacity-based routing.
+
+Dispatch/combine are expressed as einsums against one-hot dispatch tensors;
+with the expert dim sharded on the `model` axis GSPMD lowers these to
+all-to-alls (the expert-parallel pattern).  Top-1 (llama4) and top-2 (jamba)
+routing with optional shared experts and the standard load-balance aux loss.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import ModelConfig
+from repro.core.module import P
+from repro.models.layers import _act, mlp_apply, mlp_defs
+from repro.parallel.sharding import ShardingCtx
+
+
+def moe_defs(cfg: ModelConfig) -> Dict[str, Any]:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    gated = cfg.act in ("swiglu", "geglu")
+    defs: Dict[str, Any] = {
+        "router": P((d, e), (None, None), init="normal", scale=0.02),
+        "w_in": P((e, d, f), ("experts", "fsdp", None), fan_in=d),
+        "w_out": P((e, f, d), ("experts", None, "fsdp"), fan_in=f),
+    }
+    if gated:
+        defs["w_gate"] = P((e, d, f), ("experts", "fsdp", None), fan_in=d)
+    if cfg.n_shared_experts:
+        defs["shared"] = mlp_defs(cfg, d, cfg.d_ff * cfg.n_shared_experts)
+    return defs
+
+
+def capacity(cfg: ModelConfig, tokens: int) -> int:
+    c = int(cfg.capacity_factor * tokens * cfg.num_experts_per_tok / cfg.num_experts)
+    return max(8, ((c + 7) // 8) * 8)  # pad to 8 for layout friendliness
+
+
+def num_groups(ctx: ShardingCtx, T: int) -> int:
+    """GShard token grouping: capacity is enforced PER GROUP (≈ per device),
+    never globally — global capacity would make the one-hot dispatch tensor
+    (T, E, T·cf/E), i.e. quadratic in tokens.  Found via roofline analysis;
+    see EXPERIMENTS.md §Perf iteration moe-1."""
+    g = ctx.mesh.size if ctx.mesh is not None else 1
+    g = min(g, T)
+    while T % g:
+        g -= 1
+    return max(g, 1)
+
+
+def moe_apply(
+    cfg: ModelConfig,
+    ctx: ShardingCtx,
+    params: Dict[str, Any],
+    x: jax.Array,               # (B, S, d)
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (out (B,S,d), aux_loss scalar)."""
+    B, S, d = x.shape
+    cdt = x.dtype
+    E, K = cfg.num_experts, cfg.num_experts_per_tok
+    T = B * S
+    G = num_groups(ctx, T)
+    Tg = T // G
+    C = capacity(cfg, Tg)
+    xt = x.reshape(G, Tg, d)
+
+    logits = (xt.astype(jnp.float32)) @ params["router"].astype(jnp.float32)  # (G,Tg,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+
+    # top-k selection
+    gate_vals, expert_idx = jax.lax.top_k(probs, K)               # (G,Tg,K)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # load-balance aux loss (Switch/GShard form, averaged over groups)
+    me = probs.mean(axis=(0, 1))                                   # (E,)
+    ce = jax.nn.one_hot(expert_idx[..., 0], E).mean(axis=(0, 1))
+    aux = E * jnp.sum(me * ce)
+
+    # capacity-based position: rank of each (token, k) within its expert,
+    # computed independently per group
+    flat_expert = expert_idx.reshape(G, Tg * K)                    # (G, Tg*K)
+    onehot = jax.nn.one_hot(flat_expert, E, dtype=jnp.int32)       # (G, Tg*K, E)
+    pos_in_expert = jnp.cumsum(onehot, axis=1) * onehot - 1
+    pos = jnp.max(pos_in_expert, axis=-1)                          # (G, Tg*K)
+    keep = pos < C
+    gates_flat = gate_vals.reshape(G, Tg * K) * keep.astype(jnp.float32)
+
+    pos_clipped = jnp.clip(pos, 0, C - 1)
+    e_hot = jax.nn.one_hot(flat_expert, E, dtype=cdt)              # (G,TgK,E)
+    c_hot = jax.nn.one_hot(pos_clipped, C, dtype=cdt)              # (G,TgK,C)
+    disp = (e_hot * keep[..., None].astype(cdt))[..., :, None] * c_hot[..., None, :]
+    disp = disp.reshape(G, Tg, K, E, C).sum(axis=2)                # (G,Tg,E,C)
+    comb = (e_hot.astype(jnp.float32) * gates_flat[..., None])[..., :, None] \
+        * c_hot.astype(jnp.float32)[..., None, :]
+    comb = comb.reshape(G, Tg, K, E, C).sum(axis=2).astype(cdt)    # (G,Tg,E,C)
+
+    # expert compute: all-to-all emerges from g (data-ish) × e (model) sharding
+    xe = jnp.einsum("gtd,gtec->gecd", xt, disp)                    # (G,E,C,d)
+    xe = ctx.cons(xe, "batch", "experts", None, None)
+    h = jnp.einsum("gecd,edf->gecf", xe, params["w_in"].astype(cdt))
+    if "w_gate" in params:
+        g_ = jnp.einsum("gecd,edf->gecf", xe, params["w_gate"].astype(cdt))
+        h = _act(cfg.act, g_) * h
+    else:
+        h = _act(cfg.act, h)
+    ye = jnp.einsum("gecf,efd->gecd", h, params["w_out"].astype(cdt))
+    ye = ctx.cons(ye, "batch", "experts", None, None)
+    out = jnp.einsum("gecd,gtec->gtd", ye, comb)
+
+    out = out.reshape(B, S, d)
+    if "shared" in params:
+        out = out + mlp_apply(cfg, ctx, params["shared"], x)
+
+    return out, aux.astype(jnp.float32)
+
+
+def moe_ref_dense(cfg: ModelConfig, params: Dict[str, Any], x: jax.Array) -> jax.Array:
+    """Oracle: route every token to its top-k experts with no capacity limit.
+
+    Used by tests to bound the dispatch error introduced by capacity drops.
+    """
+    B, S, d = x.shape
+    xt = x.reshape(-1, d).astype(jnp.float32)
+    logits = xt @ params["router"].astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, cfg.num_experts_per_tok)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+    w_in = params["w_in"].astype(jnp.float32)
+    w_out = params["w_out"].astype(jnp.float32)
+    w_gate = params.get("w_gate")
+    out = jnp.zeros_like(xt)
+    for k in range(cfg.num_experts_per_tok):
+        idx = expert_idx[:, k]
+        wi = w_in[idx]                                   # (T, d, f)
+        h = jnp.einsum("td,tdf->tf", xt, wi)
+        if w_gate is not None:
+            g = jnp.einsum("td,tdf->tf", xt, w_gate.astype(jnp.float32)[idx])
+            h = _act(cfg.act, g) * h
+        else:
+            h = _act(cfg.act, h)
+        y = jnp.einsum("tf,tfd->td", h, w_out[idx])
+        out = out + gate_vals[:, k:k + 1] * y
+    return out.reshape(B, S, d).astype(x.dtype)

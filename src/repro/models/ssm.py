@@ -1,0 +1,159 @@
+"""Mamba-2 (SSD) block: in_proj → causal depthwise conv → SSD scan → gated
+norm → out_proj, plus the single-step recurrent path for decoding.
+
+Sharding: SSD heads are independent, so the block is head-TP over the
+`model` axis (ssm heads always divide 16 for the assigned archs); the
+recurrent state (B, H, P, N) shards the same way for decode.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import ModelConfig
+from repro.core.module import P
+from repro.kernels import ops
+from repro.parallel.sharding import ShardingCtx
+
+
+def _dims(cfg: ModelConfig):
+    di = cfg.d_inner
+    nh = cfg.ssm_nheads
+    ng, ns = cfg.ssm_ngroups, cfg.ssm_state
+    conv_dim = di + 2 * ng * ns
+    in_dim = 2 * di + 2 * ng * ns + nh        # z, x, B, C, dt
+    return di, nh, ng, ns, conv_dim, in_dim
+
+
+def ssm_defs(cfg: ModelConfig) -> Dict[str, Any]:
+    d = cfg.d_model
+    di, nh, ng, ns, conv_dim, in_dim = _dims(cfg)
+
+    def a_init(key, shape, dtype):
+        # A in [-16, -1): standard mamba2 init, log-uniform
+        u = jax.random.uniform(key, shape, jnp.float32, 1.0, 16.0)
+        return (-u).astype(dtype)
+
+    def dt_bias_init(key, shape, dtype):
+        # softplus^-1 of dt in [1e-3, 1e-1]
+        dt = jnp.exp(
+            jax.random.uniform(key, shape, jnp.float32)
+            * (jnp.log(0.1) - jnp.log(0.001))
+            + jnp.log(0.001)
+        )
+        return (dt + jnp.log(-jnp.expm1(-dt))).astype(dtype)
+
+    return {
+        "w_in": P((d, in_dim), ("fsdp", "tp"), fan_in=d),
+        "conv_w": P((cfg.ssm_conv, conv_dim), (None, "tp"), init="normal", scale=0.1),
+        "conv_b": P((conv_dim,), ("tp",), init="zeros"),
+        "A": P((nh,), ("tp",), init=a_init),
+        "D": P((nh,), ("tp",), init="ones"),
+        "dt_bias": P((nh,), ("tp",), init=dt_bias_init),
+        "norm_scale": P((di,), ("tp",), init="ones"),
+        "w_out": P((di, d), ("tp", "fsdp"), fan_in=di),
+    }
+
+
+def _split_in(cfg, h):
+    di, nh, ng, ns, conv_dim, in_dim = _dims(cfg)
+    z = h[..., :di]
+    xbc = h[..., di:di + conv_dim]
+    dt = h[..., di + conv_dim:]
+    return z, xbc, dt
+
+
+def _grouped_rmsnorm(x: jax.Array, scale: jax.Array, nheads: int, eps=1e-5):
+    """RMSNorm per SSD head group (keeps the op local under head-TP)."""
+    B, S, di = x.shape
+    hd = di // nheads
+    xg = x.reshape(B, S, nheads, hd).astype(jnp.float32)
+    var = jnp.mean(xg * xg, axis=-1, keepdims=True)
+    y = xg * jax.lax.rsqrt(var + eps)
+    return (y.reshape(B, S, di) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def ssm_apply(
+    cfg: ModelConfig,
+    ctx: ShardingCtx,
+    params: Dict[str, Any],
+    x: jax.Array,                      # (B, S, d_model)
+    *,
+    mode: str = "train",
+    cache: Optional[Dict[str, jax.Array]] = None,
+) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    B, S, d = x.shape
+    cdt = x.dtype
+    di, nh, ng, ns, conv_dim, in_dim = _dims(cfg)
+    kw = cfg.ssm_conv
+
+    h = x @ params["w_in"].astype(cdt)            # (B, S, in_dim)
+    if ctx.context_parallel and mode != "decode":
+        # Megatron-SP-style boundary: the residual stream arrives sequence-
+        # sharded (CP); the SSD recurrence needs the full sequence per head,
+        # so gather seq here and stay channel-sharded (head-TP) inside.
+        h = ctx.cons(h, "batch", None, "tp")
+    z, xbc, dt_raw = _split_in(cfg, h)
+
+    if mode == "decode":
+        assert cache is not None
+        # roll conv buffer: (B, kw-1, conv_dim) holds previous inputs
+        conv_buf = cache["conv"]
+        window = jnp.concatenate([conv_buf, xbc.astype(conv_buf.dtype)], axis=1)  # (B,kw,conv)
+        conv_out = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32),
+                              params["conv_w"].astype(jnp.float32))
+        conv_out = conv_out + params["conv_b"].astype(jnp.float32)
+        conv_out = jax.nn.silu(conv_out)[:, None].astype(cdt)     # (B,1,conv)
+        new_conv = window[:, 1:]
+    else:
+        # causal depthwise conv over the sequence
+        pad = jnp.zeros((B, kw - 1, conv_dim), xbc.dtype)
+        xp = jnp.concatenate([pad, xbc], axis=1)                   # (B, S+kw-1, conv)
+        conv_out = sum(
+            xp[:, i:i + S].astype(jnp.float32)
+            * params["conv_w"][i].astype(jnp.float32)[None, None, :]
+            for i in range(kw)
+        )
+        conv_out = jax.nn.silu(conv_out + params["conv_b"].astype(jnp.float32)).astype(cdt)
+        new_conv = xp[:, S:, :] if False else xp[:, -(kw - 1):, :]  # last kw-1 inputs
+
+    xs = conv_out[..., :di].reshape(B, -1, nh, di // nh)           # (B,S,H,P)
+    Bm = conv_out[..., di:di + ng * ns].reshape(B, -1, ng, ns)
+    Cm = conv_out[..., di + ng * ns:].reshape(B, -1, ng, ns)
+    dt = jax.nn.softplus(
+        dt_raw.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32)
+    )                                                               # (B,S,H)
+
+    if mode == "decode":
+        y, new_state = ops.ssd_decode_step(
+            xs, dt, params["A"], Bm, Cm, params["D"], cache["state"]
+        )
+        new_cache = {"conv": new_conv, "state": new_state}
+    else:
+        y, final_state = ops.ssd(
+            xs, dt, params["A"], Bm, Cm, params["D"], chunk=cfg.ssm_chunk
+        )
+        new_cache = (
+            {"conv": new_conv.astype(cdt), "state": final_state.astype(jnp.float32)}
+            if mode == "prefill"
+            else None
+        )
+
+    y = y.reshape(B, -1, di)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(cdt)         # gate
+    y = _grouped_rmsnorm(y, params["norm_scale"], nh)
+    out = y @ params["w_out"].astype(cdt)
+    if ctx.context_parallel and mode != "decode":
+        # back to the sequence-sharded residual layout (reduce-scatter)
+        out = ctx.cons(out, "batch", "seq_cp", None)
+    return out, new_cache
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16):
+    di, nh, ng, ns, conv_dim, _ = _dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), dtype),
+        "state": jnp.zeros((batch, nh, di // nh, ns), jnp.float32),
+    }

@@ -1,0 +1,29 @@
+"""LR schedules: WSD (warmup-stable-decay), cosine, Noam, constant."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.config import TrainConfig
+
+
+def lr_at(tc: TrainConfig, step) -> jnp.ndarray:
+    s = jnp.asarray(step, jnp.float32)
+    peak = tc.learning_rate
+    warm = jnp.float32(max(tc.warmup_steps, 1))
+    if tc.schedule == "const":
+        return jnp.where(s < warm, peak * s / warm, peak)
+    if tc.schedule == "noam":
+        # Vaswani et al.: d^-0.5 * min(s^-0.5, s * warm^-1.5), scaled by peak
+        s1 = jnp.maximum(s, 1.0)
+        return peak * jnp.minimum(s1 ** -0.5, s1 * warm ** -1.5) / (warm ** -0.5)
+    total = jnp.float32(max(tc.total_steps, 1))
+    if tc.schedule == "cosine":
+        frac = jnp.clip((s - warm) / jnp.maximum(total - warm, 1.0), 0.0, 1.0)
+        cos = tc.min_lr + 0.5 * (peak - tc.min_lr) * (1 + jnp.cos(jnp.pi * frac))
+        return jnp.where(s < warm, peak * s / warm, cos)
+    # WSD: warmup -> stable -> linear decay over the last decay_steps
+    decay = jnp.float32(max(tc.decay_steps, 1))
+    decay_start = total - decay
+    lin = peak + (tc.min_lr - peak) * jnp.clip((s - decay_start) / decay, 0.0, 1.0)
+    stable = jnp.where(s < decay_start, peak, lin)
+    return jnp.where(s < warm, peak * s / warm, stable)

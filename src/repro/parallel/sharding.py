@@ -1,0 +1,106 @@
+"""Logical→physical sharding rules.
+
+The mesh has axes (``data``, ``model``) on one pod and (``pod``, ``data``,
+``model``) across pods.  Models annotate params/activations with *logical*
+axis names; this module maps them onto mesh axes per :class:`ParallelConfig`.
+
+Weight storage convention (uniform across archs — see DESIGN.md §5):
+  * every large 2-D weight is stored (fsdp-dim, tp-dim) — combined FSDP+TP,
+    ZeRO-3-like.  GSPMD inserts the all-gathers at use sites.
+  * expert weights carry a leading `experts` dim on the `model` axis.
+  * activations: batch over (pod?, data); in context-parallel attention the
+    sequence dim is constrained to `model`.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+from repro.core.config import ParallelConfig
+
+
+def mesh_axis_sizes(mesh: Mesh) -> Dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def axis_rules(pc: ParallelConfig, mesh: Mesh) -> Dict[str, Any]:
+    """Logical-name -> mesh-axis (or tuple) mapping."""
+    names = mesh.axis_names
+    has_pod = "pod" in names
+    batch_axes: Tuple[str, ...] = ("pod", "data") if has_pod else ("data",)
+    fsdp = tuple(a for a in pc.fsdp_axes if a in names)
+    rules: Dict[str, Any] = {
+        "batch": batch_axes,
+        "seq": None,            # sequence replicated by default
+        "seq_cp": "model",      # context-parallel sequence shard
+        "embed": None,          # residual stream dim: replicated
+        "fsdp": fsdp or None,
+        "tp": "model",
+        "experts": pc.expert_axis,
+        "layers": None,
+        "cache_seq": "model" if pc.shard_cache_seq else None,
+        "cache_batch": batch_axes,
+        "vocab": "model",
+        "kv_tp": "model",
+        "stats": None,
+        # flattened (batch*seq) token dim (loss computation)
+        "tokens": (
+            (*batch_axes, "model")
+            if pc.attention_parallelism == "context"
+            else batch_axes
+        ),
+    }
+    if len(fsdp) == 1:
+        rules["fsdp"] = fsdp[0]
+    return rules
+
+
+def spec(rules: Dict[str, Any], *logical: Optional[str]) -> PartitionSpec:
+    phys = [rules.get(ax) if ax is not None else None for ax in logical]
+    while phys and phys[-1] is None:
+        phys.pop()
+    return PartitionSpec(*phys)
+
+
+def named(mesh: Mesh, pspec: PartitionSpec) -> NamedSharding:
+    return NamedSharding(mesh, pspec)
+
+
+def constrain(x, mesh: Mesh, pspec: PartitionSpec):
+    """with_sharding_constraint that is a no-op off-mesh (CPU unit tests)."""
+    if mesh is None or mesh.empty or mesh.size == 1:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, pspec))
+
+
+class ShardingCtx:
+    """Bundles mesh + rules; threaded through model apply fns.
+
+    When ``mesh`` is None (pure single-device CPU tests) every constraint is
+    a no-op, so the same model code runs everywhere.
+    """
+
+    def __init__(self, mesh: Optional[Mesh], pc: ParallelConfig):
+        self.mesh = mesh
+        self.pc = pc
+        self.rules = axis_rules(pc, mesh) if mesh is not None else {}
+
+    @property
+    def context_parallel(self) -> bool:
+        return self.pc.attention_parallelism == "context"
+
+    def cons(self, x, *logical: Optional[str]):
+        if self.mesh is None:
+            return x
+        return constrain(x, self.mesh, spec(self.rules, *logical))
+
+    def sp(self, *logical: Optional[str]) -> PartitionSpec:
+        if self.mesh is None:
+            return PartitionSpec()
+        return spec(self.rules, *logical)
+
+
+def null_ctx() -> ShardingCtx:
+    return ShardingCtx(None, ParallelConfig())

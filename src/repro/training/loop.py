@@ -1,0 +1,59 @@
+"""Training loop with logging + checkpoint hooks (BioNeMo trainer analogue)."""
+from __future__ import annotations
+
+import os
+import time
+from typing import Any, Callable, Dict, Iterator, List, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint import ckpt
+from repro.core.config import TrainConfig
+from repro.models.model import Model
+from repro.training.train_step import TrainState, init_train_state, make_train_step
+
+
+def run_training(
+    model: Model,
+    tc: TrainConfig,
+    batches: Iterator[Dict[str, np.ndarray]],
+    *,
+    state: Optional[TrainState] = None,
+    hooks: Optional[List[Callable[[int, Dict[str, float]], None]]] = None,
+    verbose: bool = True,
+) -> tuple[TrainState, List[Dict[str, float]]]:
+    key = jax.random.PRNGKey(tc.seed)
+    if state is None:
+        state = init_train_state(model, key, tc)
+    step_fn = jax.jit(make_train_step(model, tc), donate_argnums=(0,))
+
+    history: List[Dict[str, float]] = []
+    t0 = time.time()
+    tokens_seen = 0
+    it = iter(batches)
+    for step in range(tc.total_steps):
+        batch = next(it)
+        state, metrics = step_fn(state, batch)
+        if (step % max(tc.log_every, 1)) == 0 or step == tc.total_steps - 1:
+            m = {k: float(v) for k, v in metrics.items()}
+            dt = time.time() - t0
+            tokens_seen += float(m.get("tokens", 0)) * max(tc.log_every, 1)
+            m.update(step=step, wall=dt)
+            history.append(m)
+            if verbose:
+                print(
+                    f"step {step:5d}  loss {m['loss']:.4f}  ce {m['ce_loss']:.4f}  "
+                    f"gnorm {m['grad_norm']:.2f}  lr {m['lr']:.2e}  {dt:.1f}s"
+                )
+            for h in hooks or []:
+                h(step, m)
+        if tc.ckpt_every and tc.ckpt_dir and step and step % tc.ckpt_every == 0:
+            ckpt.save(os.path.join(tc.ckpt_dir, f"step_{step}"), state.params, step)
+    if tc.ckpt_every and tc.ckpt_dir:
+        ckpt.save(
+            os.path.join(tc.ckpt_dir, f"step_{tc.total_steps}"),
+            state.params,
+            tc.total_steps,
+        )
+    return state, history

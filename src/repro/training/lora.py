@@ -1,0 +1,102 @@
+"""LoRA fine-tuning (BioNeMo ships PEFT/LoRA recipes as first-class
+features for adapting ESM-2/Geneformer to downstream drug-discovery tasks).
+
+Implementation: adapters live in a *separate* pytree from the frozen base
+params — the base stays sharded/donated untouched, the optimizer holds
+states only for the adapters (tiny), and merging is an explicit export
+step.  Adapters target the attention projections (wq/wk/wv/wo) and/or MLP
+in/out, selected by name.
+
+    adapters   = lora.init_adapters(model, rank=8, key=key)
+    apply_fn   = lora.merged_params(model, base_params, adapters)  # lazily
+    loss       = model.loss_fn(apply_fn, batch)
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import Model
+
+DEFAULT_TARGETS = ("wq", "wv")
+
+
+def _walk(tree: Any, path=()):
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            yield from _walk(v, path + (k,))
+    else:
+        yield path, tree
+
+
+def target_paths(
+    params: Any, targets: Tuple[str, ...] = DEFAULT_TARGETS
+) -> List[Tuple[str, ...]]:
+    """Paths of 2-D (or scan-stacked 3-D) weights whose leaf name matches."""
+    out = []
+    for path, leaf in _walk(params):
+        if path[-1] in targets and getattr(leaf, "ndim", 0) in (2, 3):
+            out.append(path)
+    return sorted(out)
+
+
+def init_adapters(
+    base_params: Any,
+    rank: int = 8,
+    alpha: float = 16.0,
+    targets: Tuple[str, ...] = DEFAULT_TARGETS,
+    *,
+    key: jax.Array,
+) -> Dict[str, Any]:
+    """A/B pairs per target weight; A ~ N(0, 1/r), B = 0 (standard init)."""
+    adapters: Dict[str, Any] = {"alpha": jnp.float32(alpha), "weights": {}}
+    for i, path in enumerate(target_paths(base_params, targets)):
+        leaf = base_params
+        for k in path:
+            leaf = leaf[k]
+        stacked = leaf.ndim == 3  # (layers, din, dout)
+        din, dout = leaf.shape[-2], leaf.shape[-1]
+        lead = (leaf.shape[0],) if stacked else ()
+        ka = jax.random.fold_in(key, i)
+        A = jax.random.normal(ka, (*lead, din, rank), jnp.float32) / math.sqrt(rank)
+        B = jnp.zeros((*lead, rank, dout), jnp.float32)
+        adapters["weights"]["/".join(path)] = {"A": A, "B": B}
+    return adapters
+
+
+def merged_params(base_params: Any, adapters: Dict[str, Any]) -> Any:
+    """Functional merge: W' = W + (alpha/r)·A·B (no in-place mutation)."""
+    alpha = adapters["alpha"]
+    wmap = adapters["weights"]
+
+    def merge(tree, path=()):
+        if isinstance(tree, dict):
+            return {k: merge(v, path + (k,)) for k, v in tree.items()}
+        key = "/".join(path)
+        if key in wmap:
+            A, B = wmap[key]["A"], wmap[key]["B"]
+            r = A.shape[-1]
+            delta = jnp.einsum("...ir,...ro->...io", A, B) * (alpha / r)
+            return (tree.astype(jnp.float32) + delta).astype(tree.dtype)
+        return tree
+
+    return merge(base_params)
+
+
+def make_lora_loss(model: Model, base_params: Any):
+    """loss(adapters, batch) — differentiates ONLY the adapters."""
+
+    def loss_fn(adapters, batch):
+        params = merged_params(base_params, adapters)
+        return model.loss_fn(params, batch)
+
+    return loss_fn
+
+
+def count_trainable(adapters: Dict[str, Any]) -> int:
+    return sum(
+        x.size for x in jax.tree.leaves(adapters["weights"])
+    )

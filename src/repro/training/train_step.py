@@ -1,0 +1,103 @@
+"""Train/serve step builders: loss + grad + clip + AdamW, with shardings.
+
+``make_train_step`` returns (step_fn, in_shardings, out_shardings) ready for
+``jax.jit`` — the same builder serves CPU unit tests (mesh=None) and the
+256/512-chip dry-run (mesh=production).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import ModelConfig, ParallelConfig, TrainConfig
+from repro.core.precision import dtype_of
+from repro.models.model import Model, build_model
+from repro.optim import adamw
+from repro.optim.schedule import lr_at
+
+
+class TrainState:
+    """Plain pytree: params + optimizer state."""
+
+    def __init__(self, params, opt: adamw.AdamWState):
+        self.params = params
+        self.opt = opt
+
+    def tree_flatten(self):
+        return (self.params, self.opt), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+jax.tree_util.register_pytree_node(
+    TrainState, TrainState.tree_flatten, TrainState.tree_unflatten
+)
+
+
+def init_train_state(model: Model, key, tc: TrainConfig) -> TrainState:
+    params = model.init(key)
+    sdt = dtype_of(model.ctx.pc.optimizer_state_dtype)
+    return TrainState(params, adamw.init_state(params, sdt))
+
+
+def abstract_train_state(model: Model) -> TrainState:
+    params = model.abstract_params()
+    sdt = dtype_of(model.ctx.pc.optimizer_state_dtype)
+    z = lambda p: jax.ShapeDtypeStruct(p.shape, sdt)
+    opt = adamw.AdamWState(
+        step=jax.ShapeDtypeStruct((), jnp.int32),
+        mu=jax.tree.map(z, params),
+        nu=jax.tree.map(z, params),
+    )
+    return TrainState(params, opt)
+
+
+def train_state_specs(model: Model) -> TrainState:
+    pspecs = model.param_specs()
+    return TrainState(pspecs, adamw.state_specs(pspecs))
+
+
+def make_train_step(model: Model, tc: TrainConfig):
+    """Returns step_fn(state, batch) -> (state, metrics)."""
+
+    def step_fn(state: TrainState, batch: Dict[str, jax.Array]):
+        def loss_of(params):
+            return model.loss_fn(params, batch)
+
+        (loss, metrics), grads = jax.value_and_grad(loss_of, has_aux=True)(state.params)
+        grads, gnorm = adamw.clip_by_global_norm(grads, tc.grad_clip)
+        lr = lr_at(tc, state.opt.step + 1)  # first update uses step 1 (warmup>0)
+        params, opt = adamw.apply_updates(state.params, grads, state.opt, lr, tc)
+        metrics = dict(metrics)
+        metrics.update(loss=loss, grad_norm=gnorm, lr=lr)
+        return TrainState(params, opt), metrics
+
+    return step_fn
+
+
+def make_eval_step(model: Model):
+    def eval_fn(params, batch):
+        loss, metrics = model.loss_fn(params, batch)
+        return metrics
+
+    return eval_fn
+
+
+# ------------------------------------------------------------------ serving
+def make_prefill_step(model: Model, max_len: int):
+    def prefill_fn(params, batch):
+        return model.prefill(params, batch, max_len)
+
+    return prefill_fn
+
+
+def make_decode_step(model: Model):
+    def decode_fn(params, cache, tokens):
+        return model.decode_step(params, cache, tokens)
+
+    return decode_fn

@@ -1,0 +1,133 @@
+"""Per-architecture smoke tests: a REDUCED variant of each assigned config
+(<=2 layers, d_model<=256, <=4 experts — same family wiring) runs one
+forward/train step and, where applicable, one prefill+decode step on CPU.
+Asserts output shapes and absence of NaNs."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, get_smoke_config, list_archs
+from repro.core.config import TrainConfig
+from repro.models.model import build_model
+from repro.training.train_step import init_train_state, make_train_step
+
+ASSIGNED = [
+    "command-r-35b", "mamba2-2.7b", "qwen1.5-32b", "llama4-scout-17b-a16e",
+    "whisper-medium", "internvl2-26b", "qwen2-7b", "llama3-405b",
+    "llama4-maverick-400b-a17b", "jamba-1.5-large-398b",
+]
+BIO = ["esm2-650m", "esm2-3b", "geneformer-106m", "molmim-65m"]
+
+
+def make_batch(cfg, B=2, S=32, key=jax.random.PRNGKey(0)):
+    batch = {}
+    if cfg.frontend == "vision_stub":
+        nf = cfg.num_frontend_tokens
+        batch["tokens"] = jax.random.randint(key, (B, S), 5, cfg.vocab_size)
+        batch["img_embeds"] = jax.random.normal(key, (B, nf, cfg.d_model))
+    elif cfg.frontend == "audio_stub":
+        batch["tokens"] = jax.random.randint(key, (B, S), 5, cfg.vocab_size)
+        batch["enc_embeds"] = jax.random.normal(
+            key, (B, cfg.num_frontend_tokens, cfg.d_model)
+        )
+    elif cfg.is_encoder_decoder:
+        batch["tokens"] = jax.random.randint(key, (B, S), 5, cfg.vocab_size)
+        batch["src_tokens"] = batch["tokens"]
+    elif cfg.objective == "mlm":
+        batch["tokens"] = jax.random.randint(key, (B, S), 5, cfg.vocab_size)
+        batch["targets"] = batch["tokens"]
+        batch["loss_mask"] = jnp.ones((B, S), jnp.float32)
+    else:
+        batch["tokens"] = jax.random.randint(key, (B, S), 5, cfg.vocab_size)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ASSIGNED + BIO)
+def test_smoke_train_step(arch):
+    cfg = get_smoke_config(arch)
+    assert cfg.num_layers <= max(2, cfg.attn_layer_period)
+    assert cfg.d_model <= 512 and (cfg.num_experts or 0) <= 4
+    model = build_model(cfg)
+    tc = TrainConfig(total_steps=1, warmup_steps=1)
+    state = init_train_state(model, jax.random.PRNGKey(0), tc)
+    batch = make_batch(cfg)
+    step = jax.jit(make_train_step(model, tc))
+    new_state, metrics = step(state, batch)
+    assert np.isfinite(float(metrics["loss"])), (arch, metrics)
+    # params updated (at least one leaf changed)
+    changed = any(
+        not np.array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(
+            jax.tree.leaves(state.params), jax.tree.leaves(new_state.params)
+        )
+    )
+    assert changed, arch
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_smoke_prefill_decode(arch):
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = make_batch(cfg, B=2, S=16)
+    batch.pop("targets", None)
+    batch.pop("loss_mask", None)
+    logits, cache = jax.jit(lambda p, b: model.prefill(p, b, 32))(params, batch)
+    V = cfg.padded_vocab
+    assert logits.shape == (2, 1, V)
+    assert np.isfinite(np.asarray(logits)).all(), arch
+    tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+    logits2, cache = jax.jit(model.decode_step)(params, cache, tok)
+    assert logits2.shape == (2, 1, V)
+    assert np.isfinite(np.asarray(logits2)).all(), arch
+    n_front = cfg.num_frontend_tokens if cfg.frontend == "vision_stub" else 0
+    assert int(cache["pos"]) == 16 + n_front + 1
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_full_config_matches_assignment(arch):
+    """The FULL configs carry the exact assigned dimensions."""
+    spec = {
+        "command-r-35b": (40, 8192, 64, 8, 22528, 256000),
+        "mamba2-2.7b": (64, 2560, None, None, 0, 50280),
+        "qwen1.5-32b": (64, 5120, 40, 40, 27392, 152064),
+        "llama4-scout-17b-a16e": (48, 5120, 40, 8, 8192, 202048),
+        "whisper-medium": (24, 1024, 16, 16, 4096, 51865),
+        "internvl2-26b": (48, 6144, 48, 8, 16384, 92553),
+        "qwen2-7b": (28, 3584, 28, 4, 18944, 152064),
+        "llama3-405b": (126, 16384, 128, 8, 53248, 128256),
+        "llama4-maverick-400b-a17b": (48, 5120, 40, 8, 8192, 202048),
+        "jamba-1.5-large-398b": (72, 8192, 64, 8, 24576, 65536),
+    }[arch]
+    cfg = get_config(arch)
+    L, d, h, kv, ff, V = spec
+    assert cfg.num_layers == L and cfg.d_model == d
+    if h is not None:
+        assert cfg.num_heads == h and cfg.num_kv_heads == kv
+    assert cfg.d_ff == ff and cfg.vocab_size == V
+    assert cfg.citation
+
+
+def test_moe_configs_expert_counts():
+    assert get_config("llama4-scout-17b-a16e").num_experts == 16
+    assert get_config("llama4-maverick-400b-a17b").num_experts == 128
+    j = get_config("jamba-1.5-large-398b")
+    assert j.num_experts == 16 and j.num_experts_per_tok == 2
+    assert j.attn_layer_period == 8
+
+
+def test_param_counts_in_expected_range():
+    expect = {
+        "llama3-405b": (380e9, 430e9),
+        "jamba-1.5-large-398b": (370e9, 420e9),
+        "llama4-maverick-400b-a17b": (370e9, 420e9),
+        "mamba2-2.7b": (2.4e9, 3.0e9),
+        "qwen2-7b": (7.0e9, 8.2e9),
+        "esm2-650m": (0.6e9, 0.72e9),
+    }
+    for arch, (lo, hi) in expect.items():
+        n = get_config(arch).param_count()
+        assert lo <= n <= hi, (arch, n)

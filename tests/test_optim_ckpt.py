@@ -1,0 +1,96 @@
+"""Optimizer math, LR schedules, checkpoint resharding restore."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.config import TrainConfig
+from repro.optim import adamw
+from repro.optim.schedule import lr_at
+
+
+def test_adamw_matches_reference_formula():
+    """One AdamW step vs hand-computed update (fp32, no decay)."""
+    tc = TrainConfig(beta1=0.9, beta2=0.999, eps=1e-8, weight_decay=0.0)
+    p = {"w": jnp.array([1.0, -2.0, 3.0])}
+    g = {"w": jnp.array([0.1, 0.2, -0.3])}
+    state = adamw.init_state(p)
+    lr = jnp.float32(0.01)
+    new_p, new_s = adamw.apply_updates(p, g, state, lr, tc)
+    m = 0.1 * np.asarray(g["w"])
+    v = 0.001 * np.asarray(g["w"]) ** 2
+    mhat = m / (1 - 0.9)
+    vhat = v / (1 - 0.999)
+    want = np.asarray(p["w"]) - 0.01 * mhat / (np.sqrt(vhat) + 1e-8)
+    np.testing.assert_allclose(np.asarray(new_p["w"]), want, rtol=1e-6)
+    assert int(new_s.step) == 1
+
+
+def test_weight_decay_only_on_matrices():
+    tc = TrainConfig(weight_decay=0.1, learning_rate=0.0)
+    p = {"w": jnp.ones((2, 2)), "b": jnp.ones((2,))}
+    g = {"w": jnp.zeros((2, 2)), "b": jnp.zeros((2,))}
+    state = adamw.init_state(p)
+    # lr=0.05 explicit
+    new_p, _ = adamw.apply_updates(p, g, state, jnp.float32(0.05), tc)
+    assert float(new_p["w"][0, 0]) < 1.0       # decayed
+    assert float(new_p["b"][0]) == 1.0          # not decayed
+
+
+def test_grad_clip():
+    g = {"a": jnp.full((4,), 10.0)}
+    clipped, gn = adamw.clip_by_global_norm(g, 1.0)
+    assert abs(float(gn) - 20.0) < 1e-4
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(clipped["a"])), 1.0, rtol=1e-5
+    )
+
+
+def test_bf16_optimizer_states():
+    p = {"w": jnp.ones((4,), jnp.float32)}
+    s = adamw.init_state(p, jnp.bfloat16)
+    assert s.mu["w"].dtype == jnp.bfloat16
+    tc = TrainConfig()
+    g = {"w": jnp.full((4,), 0.5)}
+    new_p, new_s = adamw.apply_updates(p, g, s, jnp.float32(0.1), tc)
+    assert new_s.mu["w"].dtype == jnp.bfloat16
+    assert np.isfinite(np.asarray(new_p["w"], np.float32)).all()
+
+
+@pytest.mark.parametrize("sched", ["wsd", "cosine", "noam", "const"])
+def test_schedules_warmup_and_finite(sched):
+    tc = TrainConfig(learning_rate=1e-3, warmup_steps=10, total_steps=100,
+                     decay_steps=20, schedule=sched)
+    lrs = [float(lr_at(tc, s)) for s in range(0, 101, 5)]
+    assert all(np.isfinite(lrs))
+    assert lrs[0] <= lrs[1]            # warming up
+    assert max(lrs) <= tc.learning_rate * 1.001
+
+
+def test_wsd_decays_at_end():
+    tc = TrainConfig(learning_rate=1e-3, min_lr=1e-5, warmup_steps=10,
+                     total_steps=100, decay_steps=20, schedule="wsd")
+    assert float(lr_at(tc, 50)) == pytest.approx(1e-3)
+    assert float(lr_at(tc, 100)) == pytest.approx(1e-5, rel=1e-2)
+
+
+def test_checkpoint_restore_with_shardings(tmp_path):
+    from repro.checkpoint import ckpt
+
+    tree = {"a": jnp.arange(8.0), "nest": {"b": jnp.ones((2, 3))}}
+    ckpt.save(str(tmp_path / "c"), tree, step=3)
+    shardings = jax.tree.map(
+        lambda x: jax.sharding.SingleDeviceSharding(jax.devices()[0]), tree
+    )
+    restored = ckpt.restore(str(tmp_path / "c"), tree, shardings)
+    np.testing.assert_array_equal(np.asarray(restored["a"]), np.arange(8.0))
+    assert restored["nest"]["b"].sharding == shardings["nest"]["b"]
+
+
+def test_checkpoint_latest_step(tmp_path):
+    from repro.checkpoint import ckpt
+
+    for s in (10, 5, 20):
+        ckpt.save(str(tmp_path / f"step_{s}"), {"x": jnp.zeros(1)}, s)
+    latest = ckpt.latest_step(str(tmp_path))
+    assert latest.endswith("step_20")
