@@ -34,6 +34,21 @@ def run(report):
     us_n = _bench(lambda q: ops.attention(q, k, v, impl="naive"), q)
     report("kernels/attention_naive_1k", us_n, f"materializes SxS; ratio={us_n/us:.2f}")
 
+    # fwd+bwd (the training step shape): grad wrt q, k, v
+    def attn_grad(impl):
+        return jax.grad(
+            lambda q, k, v: ops.attention(q, k, v, impl=impl)
+            .astype(jnp.float32).sum(),
+            argnums=(0, 1, 2),
+        )
+
+    us_g = _bench(attn_grad("xla"), q, k, v)
+    report("kernels/attention_fwd_bwd_blockwise_1k", us_g,
+           f"train path; bwd/fwd={us_g/us:.2f}")
+    us_gn = _bench(attn_grad("naive"), q, k, v)
+    report("kernels/attention_fwd_bwd_naive_1k", us_gn,
+           f"materializes SxS twice; ratio={us_gn/us_g:.2f}")
+
     T, Dh, Vp = 2048, 512, 32768
     h = jax.random.normal(key, (T, Dh), jnp.float32)
     W = jax.random.normal(jax.random.fold_in(key, 3), (Dh, Vp), jnp.float32) * 0.02
@@ -42,6 +57,20 @@ def run(report):
     report("kernels/cross_entropy_blockwise_32k_vocab", us, "logits never materialize")
     us_n = _bench(lambda h: ops.cross_entropy(h, W, tgt, impl="naive")[0], h)
     report("kernels/cross_entropy_naive_32k_vocab", us_n, f"ratio={us_n/us:.2f}")
+
+    # fwd+bwd: grad wrt hidden AND the (D, V) projection — the train path
+    def ce_grad(impl):
+        return jax.grad(
+            lambda h, W: ops.cross_entropy(h, W, tgt, impl=impl)[0].sum(),
+            argnums=(0, 1),
+        )
+
+    us_g = _bench(ce_grad("xla"), h, W)
+    report("kernels/cross_entropy_fwd_bwd_blockwise_32k_vocab", us_g,
+           f"TxV grad never materializes; bwd/fwd={us_g/us:.2f}")
+    us_gn = _bench(ce_grad("naive"), h, W)
+    report("kernels/cross_entropy_fwd_bwd_naive_32k_vocab", us_gn,
+           f"ratio={us_gn/us_g:.2f}")
 
     Bs, Ss, Hs, P, G, N = 1, 512, 8, 64, 1, 64
     x = jax.random.normal(key, (Bs, Ss, Hs, P), jnp.float32)

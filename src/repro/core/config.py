@@ -80,9 +80,14 @@ class ModelConfig:
     objective: str = "clm"             # clm | mlm | seq2seq
     mlm_mask_prob: float = 0.15
 
-    # --- numerics ---
+    # --- numerics / kernels ---
     dtype: str = "bfloat16"            # activation/compute dtype
     param_dtype: str = "float32"       # stored parameter dtype
+    # hot-path kernel implementation for attention + fused cross-entropy:
+    # auto (pallas on TPU, xla elsewhere) | pallas | xla | naive |
+    # pallas_interpret (Pallas fwd+bwd kernels interpreted on any backend —
+    # the CPU-verifiable training path).  See kernels/README.md.
+    kernel_impl: str = "auto"
     citation: str = ""
 
     # ------------------------------------------------------------------ #

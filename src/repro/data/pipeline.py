@@ -61,15 +61,18 @@ class MLMBatches:
         self.rng = np.random.default_rng(seed)
 
     def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
+        L = self.seq_len
         while True:
             if self.sampler is not None:
                 idx = self.sampler.sample(self.batch)
             else:
                 idx = self.rng.integers(0, len(self.ds), size=self.batch)
-            toks = np.zeros((self.batch, self.seq_len), np.int32)
-            for r, i in enumerate(idx):
-                s = self.ds[int(i)][: self.seq_len]
-                toks[r, : len(s)] = s
+            # host hot path: one concatenate + one masked scatter instead of
+            # a per-row Python assignment loop
+            seqs = [self.ds[int(i)][:L] for i in idx]
+            lens = np.fromiter((len(s) for s in seqs), np.int64, count=len(seqs))
+            toks = np.zeros((self.batch, L), np.int32)
+            toks[np.arange(L)[None, :] < lens[:, None]] = np.concatenate(seqs)
             yield mlm_corrupt(toks, self.tok, self.rng, self.mask_prob)
 
 

@@ -1,4 +1,4 @@
-"""Pallas TPU fused vocab-softmax cross-entropy.
+"""Pallas TPU fused vocab-softmax cross-entropy (forward + backward).
 
 For 128k–256k vocabularies the (tokens × vocab) logits tensor is the single
 largest training activation (llama3-405b train_4k: 1M × 128k fp32 = 0.5 TB
@@ -14,9 +14,21 @@ log-sum-exp so full logits never reach HBM:
 VMEM per step: bt·D + D·bv + bt·bv fp32 ≈ (128·4096 + 4096·512 + 128·512)·4
 ≈ 10.5 MB at D=4096 — tiles shrink automatically for larger D.
 
-The training path uses the jnp blockwise implementation in ``ops.py``
-(autodiff-able); this kernel is the TPU serving/eval path and the subject of
-the allclose sweep vs ``ref.cross_entropy_ref``.
+Backward: the O(T) residual is the per-token LSE; block logits are
+recomputed on the MXU and the softmax gradient
+
+  dlogits = (g_loss + g_lse)·softmax − g_loss·onehot(target)
+
+is contracted immediately, so the (tokens × vocab) gradient never
+materializes alongside full logits.  Two kernels (TPU grids revisit an
+output block only along the innermost dim, so each contraction gets the
+loop order that makes its accumulator VMEM-resident):
+
+  * ``_ce_dh_kernel``  — grid (token_blocks, vocab_blocks): dH += dlogits Wᵀ
+  * ``_ce_dw_kernel``  — grid (vocab_blocks, token_blocks): dW += Hᵀ dlogits
+
+The custom-VJP dispatch wiring lives in ``ops.py``; the jnp blockwise
+implementation there remains the CPU/fallback training path.
 """
 from __future__ import annotations
 
@@ -26,6 +38,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
+
+from repro.kernels.tiling import pad_dim, pick_block
 
 NEG_INF = -1e30
 
@@ -88,10 +102,14 @@ def fused_cross_entropy(
     T, D = hidden.shape
     Vp = w_out.shape[1]
     vocab = vocab or Vp
-    block_t = min(block_t, T)
-    block_v = min(block_v, Vp)
-    assert T % block_t == 0 and Vp % block_v == 0, (T, Vp, block_t, block_v)
-    v_steps = Vp // block_v
+    # non-multiple dims: zero-pad token rows (outputs sliced below) and
+    # vocab columns (masked in-kernel via col < vocab)
+    block_t, Tp = pick_block(T, block_t)
+    block_v, Vpp = pick_block(Vp, block_v)
+    v_steps = Vpp // block_v
+    hidden_p = pad_dim(hidden, 0, Tp)
+    w_p = pad_dim(w_out, 1, Vpp)
+    tgt_p = pad_dim(targets, 0, Tp)
     kernel = functools.partial(
         _ce_kernel,
         block_t=block_t,
@@ -101,7 +119,7 @@ def fused_cross_entropy(
     )
     loss, lse = pl.pallas_call(
         kernel,
-        grid=(T // block_t, v_steps),
+        grid=(Tp // block_t, v_steps),
         in_specs=[
             pl.BlockSpec((block_t, D), lambda ti, vi: (ti, 0)),
             pl.BlockSpec((D, block_v), lambda ti, vi: (0, vi)),
@@ -112,8 +130,8 @@ def fused_cross_entropy(
             pl.BlockSpec((block_t,), lambda ti, vi: (ti,)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((T,), jnp.float32),
-            jax.ShapeDtypeStruct((T,), jnp.float32),
+            jax.ShapeDtypeStruct((Tp,), jnp.float32),
+            jax.ShapeDtypeStruct((Tp,), jnp.float32),
         ],
         scratch_shapes=[
             pltpu.VMEM((block_t, 1), jnp.float32),
@@ -121,5 +139,165 @@ def fused_cross_entropy(
             pltpu.VMEM((block_t, 1), jnp.float32),
         ],
         interpret=interpret,
-    )(hidden, w_out, targets)
-    return loss, lse
+    )(hidden_p, w_p, tgt_p)
+    return loss[:T], lse[:T]
+
+
+# --------------------------------------------------------------------- #
+# backward
+# --------------------------------------------------------------------- #
+def _block_dlogits(h, w, tgt, lse, gl, glse, vi, *, block_t, block_v, vocab):
+    """Recompute one (bt, bv) logits block from the saved LSE and form the
+    fused softmax gradient  (g_loss + g_lse)·p − g_loss·onehot  (fp32)."""
+    logits = jax.lax.dot_general(
+        h, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    col = vi * block_v + jax.lax.broadcasted_iota(jnp.int32, (block_t, block_v), 1)
+    valid = col < vocab
+    # exponent clamped at 0 (p <= 1 mathematically) so padded token rows —
+    # whose lse slot is zero-padded but whose g_loss/g_lse are zero — stay
+    # finite instead of overflowing
+    p = jnp.where(
+        valid, jnp.exp(jnp.minimum(jnp.where(valid, logits, 0.0) - lse, 0.0)), 0.0
+    )
+    onehot = jnp.where(valid & (col == tgt[:, None]), 1.0, 0.0)
+    return (gl + glse) * p - gl * onehot
+
+
+def _ce_dh_kernel(
+    h_ref, w_ref, tgt_ref, lse_ref, gl_ref, glse_ref,
+    dh_ref,
+    acc_scr,
+    *,
+    block_t: int,
+    block_v: int,
+    v_steps: int,
+    vocab: int,
+):
+    vi = pl.program_id(1)
+
+    @pl.when(vi == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    h = h_ref[...].astype(jnp.float32)
+    w = w_ref[...].astype(jnp.float32)
+    dlogits = _block_dlogits(
+        h, w, tgt_ref[...], lse_ref[...][:, None],
+        gl_ref[...][:, None], glse_ref[...][:, None], vi,
+        block_t=block_t, block_v=block_v, vocab=vocab,
+    )
+    acc_scr[...] += jax.lax.dot_general(
+        dlogits, w, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )                                                # (bt, D)
+
+    @pl.when(vi == v_steps - 1)
+    def _final():
+        dh_ref[...] = acc_scr[...].astype(dh_ref.dtype)
+
+
+def _ce_dw_kernel(
+    h_ref, w_ref, tgt_ref, lse_ref, gl_ref, glse_ref,
+    dw_ref,
+    acc_scr,
+    *,
+    block_t: int,
+    block_v: int,
+    t_steps: int,
+    vocab: int,
+):
+    vi = pl.program_id(0)
+    ti = pl.program_id(1)
+
+    @pl.when(ti == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    h = h_ref[...].astype(jnp.float32)
+    w = w_ref[...].astype(jnp.float32)
+    dlogits = _block_dlogits(
+        h, w, tgt_ref[...], lse_ref[...][:, None],
+        gl_ref[...][:, None], glse_ref[...][:, None], vi,
+        block_t=block_t, block_v=block_v, vocab=vocab,
+    )
+    acc_scr[...] += jax.lax.dot_general(
+        h, dlogits, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )                                                # (D, bv)
+
+    @pl.when(ti == t_steps - 1)
+    def _final():
+        dw_ref[...] = acc_scr[...].astype(dw_ref.dtype)
+
+
+def fused_cross_entropy_bwd(
+    hidden: jax.Array,     # (T, D)
+    w_out: jax.Array,      # (D, Vpad)
+    targets: jax.Array,    # (T,) int32
+    lse: jax.Array,        # (T,) fp32 forward residual
+    g_loss: jax.Array,     # (T,) cotangent of per-token loss
+    g_lse: jax.Array,      # (T,) cotangent of the lse output
+    *,
+    vocab: int = 0,
+    block_t: int = 128,
+    block_v: int = 512,
+    interpret: bool = False,
+):
+    """Returns (dh (T, D), dw (D, Vpad)) in the input dtypes."""
+    T, D = hidden.shape
+    Vp = w_out.shape[1]
+    vocab = vocab or Vp
+    block_t, Tp = pick_block(T, block_t)
+    block_v, Vpp = pick_block(Vp, block_v)
+    t_steps = Tp // block_t
+    v_steps = Vpp // block_v
+    # padded token rows carry zero loss/lse cotangents -> zero dlogits;
+    # padded vocab columns are masked via col < vocab
+    hidden = pad_dim(hidden, 0, Tp)
+    w_pad = pad_dim(w_out, 1, Vpp)
+    targets = pad_dim(targets, 0, Tp)
+    lse = pad_dim(lse, 0, Tp)
+    gl = pad_dim(g_loss.astype(jnp.float32), 0, Tp)
+    glse = pad_dim(g_lse.astype(jnp.float32), 0, Tp)
+
+    dh_kernel = functools.partial(
+        _ce_dh_kernel,
+        block_t=block_t, block_v=block_v, v_steps=v_steps, vocab=vocab,
+    )
+    dh = pl.pallas_call(
+        dh_kernel,
+        grid=(t_steps, v_steps),
+        in_specs=[
+            pl.BlockSpec((block_t, D), lambda ti, vi: (ti, 0)),
+            pl.BlockSpec((D, block_v), lambda ti, vi: (0, vi)),
+            pl.BlockSpec((block_t,), lambda ti, vi: (ti,)),
+            pl.BlockSpec((block_t,), lambda ti, vi: (ti,)),
+            pl.BlockSpec((block_t,), lambda ti, vi: (ti,)),
+            pl.BlockSpec((block_t,), lambda ti, vi: (ti,)),
+        ],
+        out_specs=pl.BlockSpec((block_t, D), lambda ti, vi: (ti, 0)),
+        out_shape=jax.ShapeDtypeStruct((Tp, D), hidden.dtype),
+        scratch_shapes=[pltpu.VMEM((block_t, D), jnp.float32)],
+        interpret=interpret,
+    )(hidden, w_pad, targets, lse, gl, glse)
+
+    dw_kernel = functools.partial(
+        _ce_dw_kernel,
+        block_t=block_t, block_v=block_v, t_steps=t_steps, vocab=vocab,
+    )
+    dw = pl.pallas_call(
+        dw_kernel,
+        grid=(v_steps, t_steps),
+        in_specs=[
+            pl.BlockSpec((block_t, D), lambda vi, ti: (ti, 0)),
+            pl.BlockSpec((D, block_v), lambda vi, ti: (0, vi)),
+            pl.BlockSpec((block_t,), lambda vi, ti: (ti,)),
+            pl.BlockSpec((block_t,), lambda vi, ti: (ti,)),
+            pl.BlockSpec((block_t,), lambda vi, ti: (ti,)),
+            pl.BlockSpec((block_t,), lambda vi, ti: (ti,)),
+        ],
+        out_specs=pl.BlockSpec((D, block_v), lambda vi, ti: (0, vi)),
+        out_shape=jax.ShapeDtypeStruct((D, Vpp), w_out.dtype),
+        scratch_shapes=[pltpu.VMEM((D, block_v), jnp.float32)],
+        interpret=interpret,
+    )(hidden, w_pad, targets, lse, gl, glse)
+    return dh[:T], dw[:, :Vp]

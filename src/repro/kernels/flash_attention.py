@@ -1,4 +1,4 @@
-"""Pallas TPU flash attention (forward).
+"""Pallas TPU flash attention (forward + backward).
 
 TPU-native adaptation of TransformerEngine-class fused attention:
   * grid (batch·heads, q_blocks, kv_blocks) — kv innermost so VMEM scratch
@@ -15,8 +15,21 @@ TPU-native adaptation of TransformerEngine-class fused attention:
   * supports causal masking, sliding window, logit softcap, and a q-position
     offset for decode.
 
-Validated against ``ref.attention_ref`` in interpret mode (tests sweep
-shapes/dtypes).  The jit'd wrapper lives in ``ops.py``.
+Backward pass (FlashAttention-2 style, three kernels):
+  * ``_fa_delta_kernel``  — Δ_i = Σ_d dO_id·O_id per q row (precompute).
+  * ``_fa_dq_kernel``     — grid (B·H, q_blocks, kv_blocks); recomputes
+    block probabilities from the saved per-row LSE and accumulates dQ in
+    VMEM scratch across kv steps.
+  * ``_fa_dkv_kernel``    — grid (B·Hkv, kv_blocks, group·q_blocks); the
+    innermost dim sweeps every q block of every query head in the GQA
+    group so dK/dV accumulate directly in grouped-head form — the dK/dV
+    tensors never materialize at (B, H, T, D).
+  All passes recompute S = QKᵀ on the MXU instead of saving the (S × T)
+  probability matrix — O(S) residuals (LSE, Δ), exactly like the fwd.
+
+Validated against ``ref.attention_ref`` (values) and its jax.grad
+(cotangents) in interpret mode; see tests/test_kernels.py and
+tests/test_grads.py.  The custom-VJP dispatch lives in ``ops.py``.
 """
 from __future__ import annotations
 
@@ -28,12 +41,54 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
+from repro.kernels.tiling import pad_dim, pick_block
+
 NEG_INF = -1e30
 
 
+def _block_mask(qi, ki, *, block_q, block_k, causal, window, q_offset, kv_len):
+    """(block_q, block_k) validity mask for the (qi, ki) tile."""
+    q_pos = (
+        qi * block_q
+        + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        + q_offset
+    )
+    k_pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+    mask = k_pos < kv_len
+    if causal:
+        mask &= k_pos <= q_pos
+    if window > 0:
+        mask &= k_pos > (q_pos - window)
+    return mask
+
+
+def _block_live(qi, ki, *, block_q, block_k, causal, window, q_offset):
+    """Scalar predicate: does tile (qi, ki) contain any unmasked entry?
+
+    Used to skip recompute work for tiles that are fully masked under
+    causal/window structure (the DMA still runs; the MXU work doesn't).
+    """
+    conds = []
+    if causal:
+        # last q row of the tile must reach the first k column
+        conds.append(ki * block_k <= qi * block_q + block_q - 1 + q_offset)
+    if window > 0:
+        # last k column must be inside the window of the last q row
+        conds.append(ki * block_k + block_k - 1 > qi * block_q + q_offset - window)
+    if not conds:
+        return None
+    live = conds[0]
+    for c in conds[1:]:
+        live = jnp.logical_and(live, c)
+    return live
+
+
+# --------------------------------------------------------------------- #
+# forward
+# --------------------------------------------------------------------- #
 def _fa_kernel(
     q_ref, k_ref, v_ref,       # VMEM input tiles
-    o_ref,                     # VMEM output tile
+    o_ref, lse_ref,            # VMEM output tiles
     m_scr, l_scr, acc_scr,     # VMEM scratch (carried across kv grid steps)
     *,
     scale: float,
@@ -44,6 +99,7 @@ def _fa_kernel(
     block_k: int,
     kv_steps: int,
     q_offset: int,
+    kv_len: int,
 ):
     qi = pl.program_id(1)
     ki = pl.program_id(2)
@@ -64,17 +120,10 @@ def _fa_kernel(
     if softcap > 0.0:
         s = softcap * jnp.tanh(s / softcap)
 
-    q_pos = (
-        qi * block_q
-        + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
-        + q_offset
+    mask = _block_mask(
+        qi, ki, block_q=block_q, block_k=block_k, causal=causal,
+        window=window, q_offset=q_offset, kv_len=kv_len,
     )
-    k_pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
-    mask = jnp.ones((block_q, block_k), jnp.bool_)
-    if causal:
-        mask &= k_pos <= q_pos
-    if window > 0:
-        mask &= k_pos > (q_pos - window)
     s = jnp.where(mask, s, NEG_INF)
 
     m_prev = m_scr[...]                         # (bq, 1)
@@ -92,8 +141,98 @@ def _fa_kernel(
 
     @pl.when(ki == kv_steps - 1)
     def _final():
-        denom = jnp.maximum(l_scr[...], 1e-30)
+        l = l_scr[...]
+        denom = jnp.maximum(l, 1e-30)
         o_ref[0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+        # per-row logsumexp residual for the backward pass (fully-masked
+        # rows get lse ≈ NEG_INF, which the bwd kernels treat as inert)
+        lse_ref[0] = (m_scr[...] + jnp.log(denom))[:, 0]
+
+
+def _head_major(x):
+    """(B, S, H, D) -> (B*H, S, D)."""
+    B, S, H, D = x.shape
+    return jnp.transpose(x, (0, 2, 1, 3)).reshape(B * H, S, D)
+
+
+def flash_attention_fwd(
+    q: jax.Array,              # (B, S, H, D)
+    k: jax.Array,              # (B, T, Hkv, D)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    softcap: float = 0.0,
+    q_offset: int = 0,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+):
+    """Forward kernel returning (out (B,S,H,D), lse (B*H, S) fp32)."""
+    B, S, H, D = q.shape
+    T, Hkv = k.shape[1], k.shape[2]
+    assert H % Hkv == 0, (H, Hkv)
+    group = H // Hkv
+    # non-multiple dims: zero-pad q rows (outputs sliced below) and kv rows
+    # (masked in-kernel via kv_len) rather than shrinking the block
+    block_q, Sp = pick_block(S, block_q)
+    block_k, Tp = pick_block(T, block_k)
+    kv_steps = Tp // block_k
+    scale = 1.0 / math.sqrt(D)
+
+    # (B, H) collapsed into the leading grid dim; head-major layout
+    qh = pad_dim(_head_major(q), 1, Sp)
+    kh = pad_dim(_head_major(k), 1, Tp)
+    vh = pad_dim(_head_major(v), 1, Tp)
+
+    def q_map(b, qi, ki):
+        return (b, qi, 0)
+
+    def kv_map(b, qi, ki):
+        batch = b // H
+        head = b % H
+        return (batch * Hkv + head // group, ki, 0)
+
+    def lse_map(b, qi, ki):
+        return (b, qi)
+
+    kernel = functools.partial(
+        _fa_kernel,
+        scale=scale,
+        causal=causal,
+        window=window,
+        softcap=softcap,
+        block_q=block_q,
+        block_k=block_k,
+        kv_steps=kv_steps,
+        q_offset=q_offset,
+        kv_len=T,
+    )
+    out, lse = pl.pallas_call(
+        kernel,
+        grid=(B * H, Sp // block_q, kv_steps),
+        in_specs=[
+            pl.BlockSpec((1, block_q, D), q_map),
+            pl.BlockSpec((1, block_k, D), kv_map),
+            pl.BlockSpec((1, block_k, D), kv_map),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_q, D), q_map),
+            pl.BlockSpec((1, block_q), lse_map),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B * H, Sp, D), q.dtype),
+            jax.ShapeDtypeStruct((B * H, Sp), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qh, kh, vh)
+    out, lse = out[:, :S], lse[:, :S]
+    return jnp.transpose(out.reshape(B, H, S, D), (0, 2, 1, 3)), lse
 
 
 def flash_attention(
@@ -109,21 +248,219 @@ def flash_attention(
     block_k: int = 128,
     interpret: bool = False,
 ) -> jax.Array:
+    out, _ = flash_attention_fwd(
+        q, k, v, causal=causal, window=window, softcap=softcap,
+        q_offset=q_offset, block_q=block_q, block_k=block_k,
+        interpret=interpret,
+    )
+    return out
+
+
+# --------------------------------------------------------------------- #
+# backward
+# --------------------------------------------------------------------- #
+def _fa_delta_kernel(o_ref, do_ref, delta_ref):
+    o = o_ref[0].astype(jnp.float32)
+    do = do_ref[0].astype(jnp.float32)
+    delta_ref[0] = jnp.sum(o * do, axis=-1)
+
+
+def _recompute_p_ds(
+    q, k, v, do, lse, delta, qi, ki, *,
+    scale, causal, window, softcap, block_q, block_k, q_offset, kv_len,
+):
+    """Shared bwd math: recompute probabilities + pre-softcap score grads.
+
+    Returns (p, ds) both (bq, bk) fp32; ds already includes the logit
+    scale so dq = ds @ k and dk = dsᵀ @ q need no further scaling.
+    """
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale                                   # pre-softcap scores
+    if softcap > 0.0:
+        t = jnp.tanh(s / softcap)
+        z = softcap * t                         # logits
+    else:
+        z = s
+    mask = _block_mask(
+        qi, ki, block_q=block_q, block_k=block_k, causal=causal,
+        window=window, q_offset=q_offset, kv_len=kv_len,
+    )
+    # p = exp(z - lse) on valid entries.  The mask (not the NEG_INF trick)
+    # must gate this: a fully-masked row has lse ≈ NEG_INF and exp(z - lse)
+    # would be exp(0) = 1 at its masked entries.  The exponent is clamped at
+    # 0 (p <= 1 mathematically) so garbage lse rows — fully-masked or
+    # padded q rows, whose dO is zero — stay finite instead of overflowing.
+    p = jnp.where(mask, jnp.exp(jnp.minimum(jnp.where(mask, z, 0.0) - lse, 0.0)), 0.0)
+    dp = jax.lax.dot_general(
+        do, v, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )                                            # (bq, bk)
+    dz = p * (dp - delta)
+    if softcap > 0.0:
+        dz = dz * (1.0 - t * t)                  # through the softcap tanh
+    return p, dz * scale
+
+
+def _fa_dq_kernel(
+    q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+    dq_ref,
+    dq_scr,
+    *,
+    scale: float,
+    causal: bool,
+    window: int,
+    softcap: float,
+    block_q: int,
+    block_k: int,
+    kv_steps: int,
+    q_offset: int,
+    kv_len: int,
+):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        dq_scr[...] = jnp.zeros_like(dq_scr)
+
+    def _accumulate():
+        q = q_ref[0].astype(jnp.float32)
+        k = k_ref[0].astype(jnp.float32)
+        v = v_ref[0].astype(jnp.float32)
+        do = do_ref[0].astype(jnp.float32)
+        lse = lse_ref[0][:, None]                # (bq, 1)
+        delta = delta_ref[0][:, None]
+        _, ds = _recompute_p_ds(
+            q, k, v, do, lse, delta, qi, ki,
+            scale=scale, causal=causal, window=window, softcap=softcap,
+            block_q=block_q, block_k=block_k, q_offset=q_offset, kv_len=kv_len,
+        )
+        dq_scr[...] += jax.lax.dot_general(
+            ds, k, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+
+    live = _block_live(
+        qi, ki, block_q=block_q, block_k=block_k, causal=causal,
+        window=window, q_offset=q_offset,
+    )
+    if live is None:
+        _accumulate()
+    else:
+        pl.when(live)(_accumulate)
+
+    @pl.when(ki == kv_steps - 1)
+    def _final():
+        dq_ref[0] = dq_scr[...].astype(dq_ref.dtype)
+
+
+def _fa_dkv_kernel(
+    q_ref, do_ref, lse_ref, delta_ref, k_ref, v_ref,
+    dk_ref, dv_ref,
+    dk_scr, dv_scr,
+    *,
+    scale: float,
+    causal: bool,
+    window: int,
+    softcap: float,
+    block_q: int,
+    block_k: int,
+    q_steps: int,
+    inner_steps: int,     # group * q_steps
+    q_offset: int,
+    kv_len: int,
+):
+    ki = pl.program_id(1)
+    j = pl.program_id(2)
+    qi = j % q_steps
+
+    @pl.when(j == 0)
+    def _init():
+        dk_scr[...] = jnp.zeros_like(dk_scr)
+        dv_scr[...] = jnp.zeros_like(dv_scr)
+
+    def _accumulate():
+        q = q_ref[0].astype(jnp.float32)
+        k = k_ref[0].astype(jnp.float32)
+        v = v_ref[0].astype(jnp.float32)
+        do = do_ref[0].astype(jnp.float32)
+        lse = lse_ref[0][:, None]
+        delta = delta_ref[0][:, None]
+        p, ds = _recompute_p_ds(
+            q, k, v, do, lse, delta, qi, ki,
+            scale=scale, causal=causal, window=window, softcap=softcap,
+            block_q=block_q, block_k=block_k, q_offset=q_offset, kv_len=kv_len,
+        )
+        dv_scr[...] += jax.lax.dot_general(
+            p, do, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )                                        # (bk, D)
+        dk_scr[...] += jax.lax.dot_general(
+            ds, q, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+
+    live = _block_live(
+        qi, ki, block_q=block_q, block_k=block_k, causal=causal,
+        window=window, q_offset=q_offset,
+    )
+    if live is None:
+        _accumulate()
+    else:
+        pl.when(live)(_accumulate)
+
+    @pl.when(j == inner_steps - 1)
+    def _final():
+        dk_ref[0] = dk_scr[...].astype(dk_ref.dtype)
+        dv_ref[0] = dv_scr[...].astype(dv_ref.dtype)
+
+
+def flash_attention_bwd(
+    q: jax.Array,              # (B, S, H, D)
+    k: jax.Array,              # (B, T, Hkv, D)
+    v: jax.Array,
+    out: jax.Array,            # (B, S, H, D) forward output
+    lse: jax.Array,            # (B*H, S) fp32 forward residual
+    do: jax.Array,             # (B, S, H, D) output cotangent
+    *,
+    causal: bool = True,
+    window: int = 0,
+    softcap: float = 0.0,
+    q_offset: int = 0,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+):
+    """Returns (dq, dk, dv) in the input dtypes."""
     B, S, H, D = q.shape
     T, Hkv = k.shape[1], k.shape[2]
-    assert H % Hkv == 0, (H, Hkv)
     group = H // Hkv
-    block_q = min(block_q, S)
-    block_k = min(block_k, T)
-    assert S % block_q == 0 and T % block_k == 0, (S, T, block_q, block_k)
-    kv_steps = T // block_k
+    # padded q rows carry zero dO (and zero Δ), so they contribute exactly
+    # nothing to dK/dV; padded kv rows are masked in-kernel via kv_len
+    block_q, Sp = pick_block(S, block_q)
+    block_k, Tp = pick_block(T, block_k)
+    q_steps = Sp // block_q
+    kv_steps = Tp // block_k
     scale = 1.0 / math.sqrt(D)
 
-    # (B, H) collapsed into the leading grid dim; head-major layout
-    qh = jnp.transpose(q, (0, 2, 1, 3)).reshape(B * H, S, D)
-    kh = jnp.transpose(k, (0, 2, 1, 3)).reshape(B * Hkv, T, D)
-    vh = jnp.transpose(v, (0, 2, 1, 3)).reshape(B * Hkv, T, D)
+    qh = pad_dim(_head_major(q), 1, Sp)
+    kh = pad_dim(_head_major(k), 1, Tp)
+    vh = pad_dim(_head_major(v), 1, Tp)
+    oh = pad_dim(_head_major(out), 1, Sp)
+    doh = pad_dim(_head_major(do), 1, Sp)
+    lse = pad_dim(lse, 1, Sp)
 
+    # Δ = rowsum(dO ⊙ O) precompute
+    delta = pl.pallas_call(
+        _fa_delta_kernel,
+        grid=(B * H, q_steps),
+        in_specs=[
+            pl.BlockSpec((1, block_q, D), lambda b, qi: (b, qi, 0)),
+            pl.BlockSpec((1, block_q, D), lambda b, qi: (b, qi, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q), lambda b, qi: (b, qi)),
+        out_shape=jax.ShapeDtypeStruct((B * H, Sp), jnp.float32),
+        interpret=interpret,
+    )(oh, doh)
+
+    # ---- dQ: grid (B·H, q, kv), kv innermost accumulates into scratch ----
     def q_map(b, qi, ki):
         return (b, qi, 0)
 
@@ -132,32 +469,87 @@ def flash_attention(
         head = b % H
         return (batch * Hkv + head // group, ki, 0)
 
-    kernel = functools.partial(
-        _fa_kernel,
-        scale=scale,
-        causal=causal,
-        window=window,
-        softcap=softcap,
-        block_q=block_q,
-        block_k=block_k,
-        kv_steps=kv_steps,
-        q_offset=q_offset,
+    def row_map(b, qi, ki):
+        return (b, qi)
+
+    dq_kernel = functools.partial(
+        _fa_dq_kernel,
+        scale=scale, causal=causal, window=window, softcap=softcap,
+        block_q=block_q, block_k=block_k, kv_steps=kv_steps,
+        q_offset=q_offset, kv_len=T,
     )
-    out = pl.pallas_call(
-        kernel,
-        grid=(B * H, S // block_q, kv_steps),
+    dq = pl.pallas_call(
+        dq_kernel,
+        grid=(B * H, q_steps, kv_steps),
         in_specs=[
             pl.BlockSpec((1, block_q, D), q_map),
             pl.BlockSpec((1, block_k, D), kv_map),
             pl.BlockSpec((1, block_k, D), kv_map),
+            pl.BlockSpec((1, block_q, D), q_map),
+            pl.BlockSpec((1, block_q), row_map),
+            pl.BlockSpec((1, block_q), row_map),
         ],
         out_specs=pl.BlockSpec((1, block_q, D), q_map),
-        out_shape=jax.ShapeDtypeStruct((B * H, S, D), q.dtype),
+        out_shape=jax.ShapeDtypeStruct((B * H, Sp, D), q.dtype),
+        scratch_shapes=[pltpu.VMEM((block_q, D), jnp.float32)],
+        interpret=interpret,
+    )(qh, kh, vh, doh, lse, delta)
+
+    # ---- dK/dV: grid (B·Hkv, kv, group·q) — the innermost dim walks every
+    # q block of every head in the GQA group, so dK/dV accumulate directly
+    # in grouped-head form (never materializing (B, H, T, D)). ----
+    inner_steps = group * q_steps
+
+    def q_map2(b, ki, j):
+        batch = b // Hkv
+        kvh = b % Hkv
+        g = j // q_steps
+        qi = j % q_steps
+        return (batch * H + kvh * group + g, qi, 0)
+
+    def row_map2(b, ki, j):
+        batch = b // Hkv
+        kvh = b % Hkv
+        g = j // q_steps
+        qi = j % q_steps
+        return (batch * H + kvh * group + g, qi)
+
+    def kv_map2(b, ki, j):
+        return (b, ki, 0)
+
+    dkv_kernel = functools.partial(
+        _fa_dkv_kernel,
+        scale=scale, causal=causal, window=window, softcap=softcap,
+        block_q=block_q, block_k=block_k, q_steps=q_steps,
+        inner_steps=inner_steps, q_offset=q_offset, kv_len=T,
+    )
+    dk, dv = pl.pallas_call(
+        dkv_kernel,
+        grid=(B * Hkv, kv_steps, inner_steps),
+        in_specs=[
+            pl.BlockSpec((1, block_q, D), q_map2),
+            pl.BlockSpec((1, block_q, D), q_map2),
+            pl.BlockSpec((1, block_q), row_map2),
+            pl.BlockSpec((1, block_q), row_map2),
+            pl.BlockSpec((1, block_k, D), kv_map2),
+            pl.BlockSpec((1, block_k, D), kv_map2),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_k, D), kv_map2),
+            pl.BlockSpec((1, block_k, D), kv_map2),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B * Hkv, Tp, D), k.dtype),
+            jax.ShapeDtypeStruct((B * Hkv, Tp, D), v.dtype),
+        ],
         scratch_shapes=[
-            pltpu.VMEM((block_q, 1), jnp.float32),
-            pltpu.VMEM((block_q, 1), jnp.float32),
-            pltpu.VMEM((block_q, D), jnp.float32),
+            pltpu.VMEM((block_k, D), jnp.float32),
+            pltpu.VMEM((block_k, D), jnp.float32),
         ],
         interpret=interpret,
-    )(qh, kh, vh)
-    return jnp.transpose(out.reshape(B, H, S, D), (0, 2, 1, 3))
+    )(qh, doh, lse, delta, kh, vh)
+
+    dq = jnp.transpose(dq[:, :S].reshape(B, H, S, D), (0, 2, 1, 3))
+    dk = jnp.transpose(dk[:, :T].reshape(B, Hkv, T, D), (0, 2, 1, 3))
+    dv = jnp.transpose(dv[:, :T].reshape(B, Hkv, T, D), (0, 2, 1, 3))
+    return dq, dk, dv

@@ -2,27 +2,35 @@
 
 Three implementations exist for each hot-spot:
   * ``pallas``  — the TPU kernel (``flash_attention.py`` etc.), used on TPU.
+                  Attention and cross-entropy are differentiable end-to-end:
+                  ``jax.custom_vjp`` wrappers here pair the forward kernels
+                  with their Pallas backward kernels, so ``impl="pallas"``
+                  (and ``auto`` on TPU) is trainable.
   * ``xla``     — blockwise/scanned jnp with the same O(block) memory
                   behavior, autodiff-able; used on CPU, in the dry-run
-                  lowering (keeps HLO memory honest) and as the training
-                  backward path.
+                  lowering (keeps HLO memory honest) and as the CPU/fallback
+                  training path.
   * ``naive``   — the oracle in ``ref.py`` (tests only).
 
 ``impl="auto"`` resolves to pallas on TPU, xla elsewhere.
+``impl="pallas_interpret"`` runs the Pallas kernels (fwd + bwd) in
+interpret mode on any backend — the CPU-verifiable training path used by
+the gradient test sweeps.  See kernels/README.md for the dispatch table.
 """
 from __future__ import annotations
 
 import functools
-from typing import Optional, Tuple
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
-from repro.kernels.flash_attention import flash_attention as _fa_pallas
+from repro.kernels import tiling
+from repro.kernels import flash_attention as _fa
+from repro.kernels import cross_entropy as _ce
 from repro.kernels.rmsnorm import layernorm as _ln_pallas
 from repro.kernels.rmsnorm import rmsnorm as _rms_pallas
-from repro.kernels.cross_entropy import fused_cross_entropy as _ce_pallas
 from repro.kernels.ssd_scan import ssd_scan as _ssd_pallas
 
 NEG_INF = -1e30
@@ -31,13 +39,20 @@ NEG_INF = -1e30
 import os
 
 
-def _resolve(impl: str) -> str:
+_IMPLS = ("auto", "pallas", "pallas_interpret", "xla", "naive")
+
+
+def _resolve(impl: str, interpret: bool) -> Tuple[str, bool]:
     forced = os.environ.get("REPRO_FORCE_IMPL", "")
     if forced:
-        return forced  # benchmark harness: force naive/xla/pallas globally
-    if impl != "auto":
-        return impl
-    return "pallas" if jax.default_backend() == "tpu" else "xla"
+        impl = forced  # benchmark harness: force naive/xla/pallas globally
+    if impl not in _IMPLS:
+        raise ValueError(f"unknown kernel impl {impl!r}; expected one of {_IMPLS}")
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "xla"
+    if impl == "pallas_interpret":
+        return "pallas", True
+    return impl, interpret
 
 
 # --------------------------------------------------------------------- #
@@ -63,10 +78,11 @@ def _blockwise_attention_xla(
     group = H // Hkv
     if block_k <= 0:
         block_k = int(os.environ.get("REPRO_ATTN_BLOCK_K", "2048"))
-    block_k = min(block_k, T)
-    if T % block_k:  # fall back to one block (small T)
-        block_k = T
-    nblk = T // block_k
+    # zero-pad the kv tail block; masked below via k_pos < T
+    block_k, Tp = tiling.pick_block(T, block_k)
+    k = tiling.pad_dim(k, 1, Tp)
+    v = tiling.pad_dim(v, 1, Tp)
+    nblk = Tp // block_k
     scale = 1.0 / jnp.sqrt(jnp.asarray(D, jnp.float32))
     qg = q.reshape(B, S, Hkv, group, D)
     q_pos = jnp.arange(S) + q_offset
@@ -83,7 +99,7 @@ def _blockwise_attention_xla(
         if softcap > 0.0:
             s = softcap * jnp.tanh(s / softcap)
         k_pos = ki * block_k + jnp.arange(block_k)
-        mask = jnp.ones((S, block_k), bool)
+        mask = jnp.broadcast_to(k_pos[None, :] < T, (S, block_k))
         if causal:
             mask &= k_pos[None, :] <= q_pos[:, None]
         if window > 0:
@@ -114,6 +130,50 @@ def _blockwise_attention_xla(
     return jnp.transpose(out, (0, 2, 1, 3)).astype(q.dtype)
 
 
+class _AttnCfg(NamedTuple):
+    """Hashable static config for the pallas attention custom-VJP."""
+
+    causal: bool
+    window: int
+    softcap: float
+    q_offset: int
+    block_q: int
+    block_k: int
+    interpret: bool
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _attention_pallas(cfg: _AttnCfg, q, k, v):
+    out, _ = _fa.flash_attention_fwd(
+        q, k, v, causal=cfg.causal, window=cfg.window, softcap=cfg.softcap,
+        q_offset=cfg.q_offset, block_q=cfg.block_q, block_k=cfg.block_k,
+        interpret=cfg.interpret,
+    )
+    return out
+
+
+def _attention_pallas_fwd(cfg: _AttnCfg, q, k, v):
+    out, lse = _fa.flash_attention_fwd(
+        q, k, v, causal=cfg.causal, window=cfg.window, softcap=cfg.softcap,
+        q_offset=cfg.q_offset, block_q=cfg.block_q, block_k=cfg.block_k,
+        interpret=cfg.interpret,
+    )
+    return out, (q, k, v, out, lse)
+
+
+def _attention_pallas_bwd(cfg: _AttnCfg, res, do):
+    q, k, v, out, lse = res
+    return _fa.flash_attention_bwd(
+        q, k, v, out, lse, do,
+        causal=cfg.causal, window=cfg.window, softcap=cfg.softcap,
+        q_offset=cfg.q_offset, block_q=cfg.block_q, block_k=cfg.block_k,
+        interpret=cfg.interpret,
+    )
+
+
+_attention_pallas.defvjp(_attention_pallas_fwd, _attention_pallas_bwd)
+
+
 def attention(
     q: jax.Array,
     k: jax.Array,
@@ -126,12 +186,13 @@ def attention(
     impl: str = "auto",
     interpret: bool = False,
 ) -> jax.Array:
-    impl = _resolve(impl)
+    impl, interpret = _resolve(impl, interpret)
     if impl == "pallas":
-        return _fa_pallas(
-            q, k, v, causal=causal, window=window, softcap=softcap,
-            q_offset=q_offset, interpret=interpret,
+        cfg = _AttnCfg(
+            causal=causal, window=window, softcap=softcap, q_offset=q_offset,
+            block_q=128, block_k=128, interpret=interpret,
         )
+        return _attention_pallas(cfg, q, k, v)
     if impl == "naive":
         return ref.attention_ref(
             q, k, v, causal=causal, window=window, softcap=softcap, q_offset=q_offset
@@ -157,7 +218,8 @@ def decode_attention(
     `model`-sharded cache turns max/sum into small all-reduces of per-shard
     statistics — the collective structure of flash-decoding, for free.
     """
-    if _resolve(impl) == "pallas":
+    impl, interpret = _resolve(impl, interpret)
+    if impl == "pallas":
         from repro.kernels.flash_decode import flash_decode
 
         return flash_decode(
@@ -261,19 +323,63 @@ def _ln_bwd(eps, res, dy):
 _layernorm_xla.defvjp(_ln_fwd, _ln_bwd)
 
 
+# pallas norm kernels are forward-only; pair them with the hand-written
+# xla backward formulas above so the pallas paths stay trainable (per-row
+# statistics are recomputed in bwd — cheaper than saving them from VMEM)
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def _rmsnorm_pallas(x, w, eps, interpret):
+    return _rms_pallas(x, w, eps, interpret=interpret)
+
+
+def _rms_pallas_fwd(x, w, eps, interpret):
+    return _rmsnorm_pallas(x, w, eps, interpret), (x, w)
+
+
+def _rms_pallas_bwd(eps, interpret, res, dy):
+    x, w = res
+    xf = x.astype(jnp.float32)
+    rstd = jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return _rms_bwd(eps, (x, w, rstd), dy)
+
+
+_rmsnorm_pallas.defvjp(_rms_pallas_fwd, _rms_pallas_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def _layernorm_pallas(x, w, b, eps, interpret):
+    return _ln_pallas(x, w, b, eps, interpret=interpret)
+
+
+def _ln_pallas_fwd(x, w, b, eps, interpret):
+    return _layernorm_pallas(x, w, b, eps, interpret), (x, w, b)
+
+
+def _ln_pallas_bwd(eps, interpret, res, dy):
+    x, w, b = res
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    xc = xf - mu
+    rstd = jax.lax.rsqrt(jnp.mean(xc * xc, axis=-1, keepdims=True) + eps)
+    dx, dw, db = _ln_bwd(eps, (x, w, mu, rstd), dy)
+    return dx, dw, (None if b is None else db)
+
+
+_layernorm_pallas.defvjp(_ln_pallas_fwd, _ln_pallas_bwd)
+
+
 def rmsnorm(x, w, eps: float = 1e-5, *, impl: str = "auto", interpret: bool = False):
-    impl = _resolve(impl)
+    impl, interpret = _resolve(impl, interpret)
     if impl == "pallas":
-        return _rms_pallas(x, w, eps, interpret=interpret)
+        return _rmsnorm_pallas(x, w, eps, interpret)
     if impl == "naive":
         return ref.rmsnorm_ref(x, w, eps)
     return _rmsnorm_xla(x, w, eps)
 
 
 def layernorm(x, w, b=None, eps: float = 1e-5, *, impl: str = "auto", interpret: bool = False):
-    impl = _resolve(impl)
+    impl, interpret = _resolve(impl, interpret)
     if impl == "pallas":
-        return _ln_pallas(x, w, b, eps, interpret=interpret)
+        return _layernorm_pallas(x, w, b, eps, interpret)
     if impl == "naive":
         return ref.layernorm_ref(x, w, b, eps)
     if b is None:
@@ -295,11 +401,11 @@ def _blockwise_ce_xla(hidden, w_out, targets, *, vocab, block_v=2048):
     the dry-run traffic breakdown; EXPERIMENTS.md §Perf llama3 iter-1)."""
     T, D = hidden.shape
     Vp = w_out.shape[1]
-    block_v = min(block_v, Vp)
-    if Vp % block_v:
-        block_v = Vp
-    nblk = Vp // block_v
-    wb = jnp.moveaxis(w_out.reshape(D, nblk, block_v), 1, 0)  # (nblk, D, bv)
+    # zero-pad the vocab tail; masked below via col < vocab
+    block_v, Vpp = tiling.pick_block(Vp, block_v)
+    w_pad = tiling.pad_dim(w_out, 1, Vpp)
+    nblk = Vpp // block_v
+    wb = jnp.moveaxis(w_pad.reshape(D, nblk, block_v), 1, 0)  # (nblk, D, bv)
 
     def body(_, blk):
         wblk, vi = blk
@@ -321,6 +427,41 @@ def _blockwise_ce_xla(hidden, w_out, targets, *, vocab, block_v=2048):
     return lse - tgt_logit, lse
 
 
+class _CECfg(NamedTuple):
+    """Hashable static config for the pallas cross-entropy custom-VJP."""
+
+    vocab: int
+    block_t: int
+    block_v: int
+    interpret: bool
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _cross_entropy_pallas(cfg: _CECfg, hidden, w_out, targets):
+    return _ce.fused_cross_entropy(
+        hidden, w_out, targets, vocab=cfg.vocab,
+        block_t=cfg.block_t, block_v=cfg.block_v, interpret=cfg.interpret,
+    )
+
+
+def _cross_entropy_pallas_fwd(cfg: _CECfg, hidden, w_out, targets):
+    loss, lse = _cross_entropy_pallas(cfg, hidden, w_out, targets)
+    return (loss, lse), (hidden, w_out, targets, lse)
+
+
+def _cross_entropy_pallas_bwd(cfg: _CECfg, res, g):
+    hidden, w_out, targets, lse = res
+    g_loss, g_lse = g
+    dh, dw = _ce.fused_cross_entropy_bwd(
+        hidden, w_out, targets, lse, g_loss, g_lse, vocab=cfg.vocab,
+        block_t=cfg.block_t, block_v=cfg.block_v, interpret=cfg.interpret,
+    )
+    return dh, dw, None  # targets are integer — no cotangent
+
+
+_cross_entropy_pallas.defvjp(_cross_entropy_pallas_fwd, _cross_entropy_pallas_bwd)
+
+
 def cross_entropy(
     hidden: jax.Array,
     w_out: jax.Array,
@@ -331,9 +472,10 @@ def cross_entropy(
     interpret: bool = False,
 ) -> Tuple[jax.Array, jax.Array]:
     vocab = vocab or w_out.shape[1]
-    impl = _resolve(impl)
+    impl, interpret = _resolve(impl, interpret)
     if impl == "pallas":
-        return _ce_pallas(hidden, w_out, targets, vocab=vocab, interpret=interpret)
+        cfg = _CECfg(vocab=vocab, block_t=128, block_v=512, interpret=interpret)
+        return _cross_entropy_pallas(cfg, hidden, w_out, targets)
     if impl == "naive":
         return ref.cross_entropy_ref(hidden, w_out[:, :vocab], targets)
     return _blockwise_ce_xla(hidden, w_out, targets, vocab=vocab)
@@ -403,7 +545,7 @@ def _ssd_chunked_xla(x, dt, A, Bm, Cm, D, *, chunk=64, init_state=None):
 def ssd(
     x, dt, A, Bm, Cm, D, *, chunk: int = 64, impl: str = "auto", interpret: bool = False
 ):
-    impl = _resolve(impl)
+    impl, interpret = _resolve(impl, interpret)
     if impl == "pallas":
         return _ssd_pallas(x, dt, A, Bm, Cm, D, chunk=chunk, interpret=interpret)
     if impl == "naive":

@@ -1,0 +1,26 @@
+"""Shared tiling helpers for the Pallas kernel wrappers.
+
+Kernels tile exactly (grid = padded_dim // block), so non-multiple
+dimensions are zero-padded up to a block multiple and masked inside the
+kernel (kv_len / vocab bounds) or sliced off the outputs — the block size
+itself never silently shrinks to a pathological divisor.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def pick_block(n: int, block: int):
+    """Returns (block, padded_n): block capped at n, n rounded up to a
+    block multiple."""
+    block = min(block, n)
+    return block, n + (-n % block)
+
+
+def pad_dim(x, axis: int, target: int):
+    """Zero-pad `axis` of x up to length `target` (no-op if already there)."""
+    if x.shape[axis] == target:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, target - x.shape[axis])
+    return jnp.pad(x, widths)

@@ -94,7 +94,9 @@ def attention_apply(
             pass  # no rope on cross-attention
         k, v = cache["k"], cache["v"]
         lengths = cache["len"]
-        o = ops.decode_attention(q, k, v, lengths, softcap=cfg.attn_logit_softcap)
+        o = ops.decode_attention(
+            q, k, v, lengths, softcap=cfg.attn_logit_softcap, impl=cfg.kernel_impl
+        )
         return _out_proj(cfg, ctx, params, o), cache
 
     q, k, v = _project_qkv(cfg, params, x, kv_src=cross_kv)
@@ -141,7 +143,8 @@ def attention_apply(
         k_cache = ctx.cons(k_cache, "cache_batch", "cache_seq")
         v_cache = ctx.cons(v_cache, "cache_batch", "cache_seq")
         o = ops.decode_attention(
-            q, k_cache, v_cache, lengths, softcap=cfg.attn_logit_softcap
+            q, k_cache, v_cache, lengths, softcap=cfg.attn_logit_softcap,
+            impl=cfg.kernel_impl,
         )
         new_cache = {"k": k_cache, "v": v_cache}
         return _out_proj(cfg, ctx, params, o), new_cache
@@ -152,11 +155,14 @@ def attention_apply(
         # GQA KV is small: gather it fully (llama3-style CP)
         k = ctx.cons(k, "batch", None)
         v = ctx.cons(v, "batch", None)
+    # train / prefill hot path: cfg.kernel_impl="auto" hits the fused Pallas
+    # kernels (fwd + custom-VJP bwd) on TPU, the blockwise xla path elsewhere
     o = ops.attention(
         q, k, v,
         causal=causal and not is_cross,
         window=window,
         softcap=cfg.attn_logit_softcap,
+        impl=cfg.kernel_impl,
     )
     out = _out_proj(cfg, ctx, params, o)
 

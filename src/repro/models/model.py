@@ -175,8 +175,11 @@ class Model:
             )
 
         w_head = self.head_weight(params).astype(self.policy.cdt)
+        # cfg.kernel_impl="auto": fused Pallas CE (fwd + custom-VJP bwd) on
+        # TPU so the (tokens × vocab) logits/grad never materialize; block-
+        # wise xla elsewhere
         losses, _ = ops.cross_entropy(
-            hidden, w_head, targets, vocab=cfg.vocab_size
+            hidden, w_head, targets, vocab=cfg.vocab_size, impl=cfg.kernel_impl
         )
         denom = jnp.maximum(mask.sum(), 1.0)
         loss = (losses * mask).sum() / denom
