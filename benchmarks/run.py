@@ -4,6 +4,9 @@
                    headline comparison)
   kernels_bench  — fused-kernel-semantics ops vs naive oracles
   data_bench     — bio data-pipeline throughput (cluster sampling, packing)
+  serving_bench  — continuous-batching engine dense vs paged KV cache
+                   (tokens/s, TTFT, ITL; asserts layout output parity and
+                   the O(page) decode-write advantage)
   scaling        — projected v5e throughput per arch from the dry-run
                    roofline (requires experiments/dryrun; skipped if absent)
 
@@ -22,11 +25,13 @@ def main() -> None:
         rows.append((name, us, derived))
         print(f"{name},{us:.1f},{derived}", flush=True)
 
-    from benchmarks import data_bench, kernels_bench, scaling, throughput
+    from benchmarks import (
+        data_bench, kernels_bench, scaling, serving_bench, throughput,
+    )
 
     print("name,us_per_call,derived")
     failures = 0
-    for mod in (throughput, kernels_bench, data_bench, scaling):
+    for mod in (throughput, kernels_bench, data_bench, serving_bench, scaling):
         try:
             mod.run(report)
         except Exception:  # noqa: BLE001

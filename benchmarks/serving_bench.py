@@ -1,0 +1,136 @@
+"""Serving-path benchmark: dense-slot vs paged KV-cache engine.
+
+Two measurements:
+
+  * engine comparison — the continuous-batching engine end-to-end on a
+    smoke model under both cache layouts, reporting tokens/s,
+    time-to-first-token and inter-token latency.  Token-for-token output
+    parity between the layouts is ASSERTED (the subsystem's acceptance
+    criterion), not just reported.
+  * decode cache-write microbenchmark at a long-cache config — the dense
+    layout's O(B·T) one-hot masked select vs the paged O(B·page)
+    scatter (``ops.paged_kv_update``).  The paged write must win; this
+    asserts the per-token write really is page-local, independent of the
+    cache length.
+
+CPU numbers prove the mechanism (data volume per token write); on TPU the
+same ratio shows up as HBM traffic per decode step.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _serve(model, params, prompts, layout, max_new):
+    from repro.serving.engine import Engine, Request
+
+    eng = Engine(
+        model, params, slots=4, max_len=128, cache_layout=layout, page_size=16
+    )
+    t0 = time.time()
+    for i, p in enumerate(prompts):
+        eng.submit(Request(uid=i, prompt=p, max_new=max_new))
+    done = eng.run()
+    wall = time.time() - t0
+    toks = sum(len(r.output) for r in done)
+    ttft = float(np.mean([r.t_first - r.t_submit for r in done])) * 1e3
+    itl = float(np.mean([
+        (r.t_done - r.t_first) / max(len(r.output) - 1, 1) for r in done
+    ])) * 1e3
+    outs = {r.uid: r.output for r in done}
+    return outs, toks / wall, ttft, itl, wall
+
+
+def run(report):
+    from repro.configs import get_smoke_config
+    from repro.kernels import ops
+    from repro.models.model import build_model
+
+    # ---------------------------------------------------- engine A/B
+    cfg = get_smoke_config("qwen2-7b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompts = [
+        rng.integers(5, cfg.vocab_size, size=int(rng.integers(4, 48)))
+        .astype(np.int32)
+        for _ in range(12)
+    ]
+    stats = {}
+    for layout in ("dense", "paged"):
+        outs, tps, ttft, itl, wall = _serve(model, params, prompts, layout, 16)
+        stats[layout] = outs
+        report(
+            f"serving/engine_{layout}", wall * 1e6,
+            f"tok/s={tps:.1f} ttft_ms={ttft:.1f} itl_ms={itl:.2f}",
+        )
+    assert stats["paged"] == stats["dense"], \
+        "paged engine diverged from dense-slot engine (greedy parity)"
+
+    # ------------------------------------- long-cache decode write A/B
+    B, T, Hkv, D, page = 8, 4096, 4, 64, 16
+    key = jax.random.PRNGKey(1)
+    k_cache = jax.random.normal(key, (B, T, Hkv, D), jnp.float32)
+    v_cache = jax.random.normal(jax.random.fold_in(key, 1), k_cache.shape,
+                                jnp.float32)
+    k_new = jax.random.normal(jax.random.fold_in(key, 2), (B, 1, Hkv, D),
+                              jnp.float32)
+    v_new = jax.random.normal(jax.random.fold_in(key, 3), k_new.shape,
+                              jnp.float32)
+    widx = jnp.asarray(rng.integers(0, T, size=B), jnp.int32)
+
+    def dense_write(kc, vc, kn, vn, w):
+        # the O(B·T) masked select models/attention.py uses per decode
+        # token in the dense per-slot layout
+        onehot = (jnp.arange(T)[None, :] == w[:, None])[..., None, None]
+        return jnp.where(onehot, kn, kc), jnp.where(onehot, vn, vc)
+
+    num_pages = 1 + B * (T // page)
+    k_pool = jax.random.normal(key, (num_pages, page, Hkv, D), jnp.float32)
+    v_pool = jax.random.normal(jax.random.fold_in(key, 4), k_pool.shape,
+                               jnp.float32)
+    page_idx = jnp.asarray(1 + rng.integers(0, num_pages - 1, size=B),
+                           jnp.int32)
+    row = jnp.asarray(rng.integers(0, page, size=B), jnp.int32)
+
+    def _bench_state(fn, state, *args, iters=10, warmup=2) -> float:
+        # donate the cache buffers (the serving decode loop's steady state)
+        # so XLA may update in place — without donation both layouts pay a
+        # full-pool copy that hides the write cost difference
+        jfn = jax.jit(fn, donate_argnums=(0, 1))
+        for _ in range(warmup):
+            state = jfn(*state, *args)
+            jax.block_until_ready(state)
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            state = jfn(*state, *args)
+            jax.block_until_ready(state)
+        return (time.perf_counter() - t0) / iters * 1e6
+
+    us_dense = _bench_state(
+        dense_write, (k_cache, v_cache), k_new, v_new, widx
+    )
+    us_paged = _bench_state(
+        lambda kp, vp, kn, vn, pi, r: ops.paged_kv_update(
+            kp, vp, kn, vn, pi, r, impl="xla"
+        ),
+        (k_pool, v_pool), k_new, v_new, page_idx, row,
+    )
+    report("serving/kv_write_dense_T4096", us_dense,
+           f"O(B*T) masked select, {B * T * Hkv * D * 4 * 2 / 1e6:.0f}MB touched")
+    report("serving/kv_write_paged_T4096", us_paged,
+           f"O(B*page) scatter; speedup={us_dense / us_paged:.1f}x")
+    assert us_paged < us_dense, (
+        f"paged decode write ({us_paged:.0f}us) should beat the O(B*T) "
+        f"masked select ({us_dense:.0f}us) at T={T}"
+    )
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run(lambda name, us, derived="": print(f"{name},{us:.1f},{derived}",
+                                           flush=True))

@@ -229,7 +229,11 @@ class ServeConfig:
     max_seq_len: int = 32768
     batch_size: int = 128
     temperature: float = 0.0   # 0 = greedy
-    page_size: int = 0         # reserved (paged cache); 0 = contiguous
+    # KV-cache layout for the continuous-batching engine: "dense" per-slot
+    # buffers, or "paged" block-table pages over a shared pool
+    # (serving/paged_cache.py + kernels/paged_attention.py)
+    cache_layout: str = "dense"
+    page_size: int = 16        # tokens per page in the paged layout
 
 
 def reduced(mc: ModelConfig, **over: Any) -> ModelConfig:

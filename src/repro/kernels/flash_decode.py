@@ -29,6 +29,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
+from repro.kernels import tiling
+
 NEG_INF = -1e30
 
 
@@ -97,9 +99,12 @@ def flash_decode(
     T, Hkv = k_cache.shape[1], k_cache.shape[2]
     assert H % Hkv == 0
     group = H // Hkv
-    block_t = min(block_t, T)
-    assert T % block_t == 0, (T, block_t)
-    t_steps = T // block_t
+    # non-multiple tails: zero-pad the cache up to a block multiple; the
+    # in-kernel `pos < length` mask (length <= T) drops the padded rows
+    block_t, Tp = tiling.pick_block(T, block_t)
+    k_cache = tiling.pad_dim(k_cache, 1, Tp)
+    v_cache = tiling.pad_dim(v_cache, 1, Tp)
+    t_steps = Tp // block_t
     scale = 1.0 / math.sqrt(D)
 
     qg = q.reshape(B, 1, Hkv, group, D)

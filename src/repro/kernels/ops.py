@@ -226,6 +226,10 @@ def decode_attention(
             q, k_cache, v_cache, length.astype(jnp.int32),
             softcap=softcap, interpret=interpret,
         )
+    return _decode_attention_xla(q, k_cache, v_cache, length, softcap=softcap)
+
+
+def _decode_attention_xla(q, k_cache, v_cache, length, *, softcap=0.0):
     B, _, H, D = q.shape
     T, Hkv = k_cache.shape[1], k_cache.shape[2]
     group = H // Hkv
@@ -242,6 +246,9 @@ def decode_attention(
     s = jnp.where(valid[:, None, None, :], s, NEG_INF)
     m = jnp.max(s, axis=-1, keepdims=True)
     p = jnp.exp(s - m)
+    # empty caches (length 0, e.g. an idle serving slot) yield zeros, the
+    # same semantics as the Pallas decode kernels' masked-row guard
+    p = jnp.where(m <= NEG_INF / 2, 0.0, p)
     denom = jnp.sum(p, axis=-1, keepdims=True)
     out = jnp.einsum(
         "bhgt,bthd->bhgd",
@@ -250,6 +257,79 @@ def decode_attention(
         preferred_element_type=jnp.float32,
     )
     return out.reshape(B, 1, H, D).astype(q.dtype)
+
+
+# --------------------------------------------------------------------- #
+# paged KV cache (serving): block-table attention + per-token scatter
+# --------------------------------------------------------------------- #
+def _gather_pages(pool: jax.Array, block_table: jax.Array) -> jax.Array:
+    """(num_pages, page, Hkv, D) + (B, n) table -> dense (B, n·page, Hkv, D)."""
+    B, n = block_table.shape
+    page, Hkv, D = pool.shape[1:]
+    flat = jnp.take(pool, block_table.reshape(-1), axis=0)
+    return flat.reshape(B, n * page, Hkv, D)
+
+
+def paged_decode_attention(
+    q: jax.Array,            # (B, 1, H, D)
+    k_pool: jax.Array,       # (num_pages, page, Hkv, D)
+    v_pool: jax.Array,
+    block_table: jax.Array,  # (B, pages_per_seq) int32
+    length: jax.Array,       # (B,) valid cache length per sequence
+    *,
+    softcap: float = 0.0,
+    impl: str = "auto",
+    interpret: bool = False,
+) -> jax.Array:
+    """Single-token attention through a block-table paged KV pool.
+
+    ``pallas`` gathers K/V page tiles by indexing the pool through the
+    prefetched block table inside the kernel grid — the (B, T) dense
+    cache never materializes.  The ``xla``/``naive`` fallback gathers
+    pages into a dense cache and reuses the blockwise decode math
+    (correct everywhere, O(B·T) gather — the CPU/testing path).
+    """
+    impl, interpret = _resolve(impl, interpret)
+    if impl == "pallas":
+        from repro.kernels.paged_attention import paged_flash_decode
+
+        return paged_flash_decode(
+            q, k_pool, v_pool, block_table, length.astype(jnp.int32),
+            softcap=softcap, interpret=interpret,
+        )
+    k_cache = _gather_pages(k_pool, block_table)
+    v_cache = _gather_pages(v_pool, block_table)
+    return _decode_attention_xla(q, k_cache, v_cache, length, softcap=softcap)
+
+
+def paged_kv_update(
+    k_pool: jax.Array,     # (num_pages, page, Hkv, D)
+    v_pool: jax.Array,
+    k_new: jax.Array,      # (B, 1, Hkv, D) decode-token K per slot
+    v_new: jax.Array,
+    page_idx: jax.Array,   # (B,) physical page holding each slot's write pos
+    row: jax.Array,        # (B,) row within the page (pos % page)
+    *,
+    impl: str = "auto",
+    interpret: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    """Insert one decode token per slot at (page_idx, row): O(B·page).
+
+    Replaces the dense layout's O(B·T) one-hot masked select
+    (``models/attention.py``).  ``pallas`` rewrites exactly one pool page
+    per slot in place (donated pools); ``xla``/``naive`` is the
+    equivalent jnp scatter.
+    """
+    impl, interpret = _resolve(impl, interpret)
+    if impl == "pallas":
+        from repro.kernels.paged_attention import paged_kv_write
+
+        return paged_kv_write(
+            k_pool, v_pool, k_new, v_new, page_idx, row, interpret=interpret
+        )
+    k_pool = k_pool.at[page_idx, row].set(k_new[:, 0].astype(k_pool.dtype))
+    v_pool = v_pool.at[page_idx, row].set(v_new[:, 0].astype(v_pool.dtype))
+    return k_pool, v_pool
 
 
 # --------------------------------------------------------------------- #

@@ -1,0 +1,228 @@
+"""Pallas TPU paged-attention decode + paged KV scatter write.
+
+The serving engine's paged KV cache stores tokens in fixed-size pages of a
+shared pool (``(num_pages, page, Hkv, D)``); a per-slot block table maps
+logical cache positions to physical pages (``serving/paged_cache.py``).
+Two kernels make that layout a first-class decode path:
+
+``paged_flash_decode``
+    The flash-decoding combine of ``flash_decode.py`` with the contiguous
+    cache replaced by block-table indirection: grid
+    (batch, kv_heads, pages_per_seq), and the K/V *page* tile for grid
+    step ``(b, h, p)`` is gathered straight out of the pool by the
+    BlockSpec index map reading the prefetched block table
+    (``PrefetchScalarGridSpec``) — the gather is the DMA, no
+    materialized (B, T) cache ever exists.  Combine state (m, l, acc)
+    lives in VMEM scratch across the sequential page axis, exactly like
+    the contiguous kernel.
+
+``paged_kv_write``
+    Per-token decode cache insert: grid (B,), each step rewrites ONE page
+    (the page holding ``pos``) with the new token placed at row
+    ``pos % page``.  The pool rides through ``input_output_aliases`` so
+    the op is an in-place O(B·page) scatter — replacing the O(B·T)
+    one-hot masked select the dense per-slot layout needs
+    (``models/attention.py``).
+
+Unallocated block-table entries point at the reserved null page 0; slots
+with ``length == 0`` read (and may write) only that page, so collisions
+there are harmless garbage — page 0 is never attributed to a sequence.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+NEG_INF = -1e30
+
+
+# --------------------------------------------------------------------- #
+# decode attention through the block table
+# --------------------------------------------------------------------- #
+def _pa_kernel(
+    bt_ref,      # (B, pages_per_seq) scalar-prefetch block table
+    len_ref,     # (B,) scalar-prefetch valid lengths
+    q_ref,       # (1, 1, 1, group, D)
+    k_ref,       # (1, page, 1, D)  — the page picked by the index map
+    v_ref,
+    o_ref,       # (1, 1, 1, group, D)
+    m_scr, l_scr, acc_scr,
+    *,
+    scale: float,
+    page: int,
+    p_steps: int,
+    softcap: float,
+):
+    b = pl.program_id(0)
+    pi = pl.program_id(2)
+
+    @pl.when(pi == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0, 0].astype(jnp.float32)         # (group, D)
+    k = k_ref[0, :, 0].astype(jnp.float32)         # (page, D)
+    v = v_ref[0, :, 0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale                                       # (group, page)
+    if softcap > 0.0:
+        s = softcap * jnp.tanh(s / softcap)
+
+    # logical position of each page row; pages past the valid length are
+    # the null page — masked out entirely (m stays NEG_INF for len==0).
+    pos = pi * page + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(pos < len_ref[b], s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    p = jnp.where(m_new <= NEG_INF / 2, 0.0, p)
+    alpha = jnp.exp(m_prev - m_new)
+    m_scr[...] = m_new
+    l_scr[...] = alpha * l_scr[...] + jnp.sum(p, axis=-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+    @pl.when(pi == p_steps - 1)
+    def _final():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0, 0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+def paged_flash_decode(
+    q: jax.Array,            # (B, 1, H, D)
+    k_pool: jax.Array,       # (num_pages, page, Hkv, D)
+    v_pool: jax.Array,
+    block_table: jax.Array,  # (B, pages_per_seq) int32 physical page ids
+    lengths: jax.Array,      # (B,) int32 valid cache length
+    *,
+    softcap: float = 0.0,
+    interpret: bool = False,
+) -> jax.Array:
+    B, _, H, D = q.shape
+    page, Hkv = k_pool.shape[1], k_pool.shape[2]
+    pages_per_seq = block_table.shape[1]
+    assert H % Hkv == 0
+    group = H // Hkv
+    scale = 1.0 / math.sqrt(D)
+
+    qg = q.reshape(B, 1, Hkv, group, D)
+
+    kernel = functools.partial(
+        _pa_kernel,
+        scale=scale, page=page, p_steps=pages_per_seq, softcap=softcap,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,      # block_table, lengths
+            grid=(B, Hkv, pages_per_seq),
+            in_specs=[
+                pl.BlockSpec(
+                    (1, 1, 1, group, D), lambda b, h, pi, bt, ln: (b, 0, h, 0, 0)
+                ),
+                pl.BlockSpec(
+                    (1, page, 1, D), lambda b, h, pi, bt, ln: (bt[b, pi], 0, h, 0)
+                ),
+                pl.BlockSpec(
+                    (1, page, 1, D), lambda b, h, pi, bt, ln: (bt[b, pi], 0, h, 0)
+                ),
+            ],
+            out_specs=pl.BlockSpec(
+                (1, 1, 1, group, D), lambda b, h, pi, bt, ln: (b, 0, h, 0, 0)
+            ),
+            scratch_shapes=[
+                pltpu.VMEM((group, 1), jnp.float32),
+                pltpu.VMEM((group, 1), jnp.float32),
+                pltpu.VMEM((group, D), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, 1, Hkv, group, D), q.dtype),
+        interpret=interpret,
+    )(block_table.astype(jnp.int32), lengths.astype(jnp.int32), qg, k_pool, v_pool)
+    return out.reshape(B, 1, H, D)
+
+
+# --------------------------------------------------------------------- #
+# per-token scatter write
+# --------------------------------------------------------------------- #
+def _kv_write_kernel(
+    page_idx_ref,   # (B,) scalar-prefetch physical page per slot
+    row_ref,        # (B,) scalar-prefetch row (pos % page) per slot
+    kn_ref,         # (1, 1, Hkv, D) new K token for this slot
+    vn_ref,
+    kin_ref,        # (1, page, Hkv, D) current page content (aliased pool)
+    vin_ref,
+    kout_ref,       # (1, page, Hkv, D) rewritten page
+    vout_ref,
+    *,
+    page: int,
+):
+    b = pl.program_id(0)
+    r = row_ref[b]
+    rows = jax.lax.broadcasted_iota(jnp.int32, (page, 1, 1), 0)
+    hit = rows == r
+    kout_ref[0] = jnp.where(hit, kn_ref[0].astype(kout_ref.dtype), kin_ref[0])
+    vout_ref[0] = jnp.where(hit, vn_ref[0].astype(vout_ref.dtype), vin_ref[0])
+
+
+def paged_kv_write(
+    k_pool: jax.Array,     # (num_pages, page, Hkv, D)
+    v_pool: jax.Array,
+    k_new: jax.Array,      # (B, 1, Hkv, D)
+    v_new: jax.Array,
+    page_idx: jax.Array,   # (B,) physical page holding each slot's write pos
+    row: jax.Array,        # (B,) row within that page (pos % page)
+    *,
+    interpret: bool = False,
+):
+    """In-place O(B·page) decode-token insert; returns the updated pools.
+
+    Each grid step rewrites exactly the page its slot owns at the write
+    position; pages of distinct active slots are disjoint by construction
+    (the allocator hands a page to one sequence), so steps never race on
+    live data.  Inactive slots all target the null page 0 — those writes
+    may collide, but page 0 holds no sequence.
+    """
+    B = k_new.shape[0]
+    P, page, Hkv, D = k_pool.shape
+    kernel = functools.partial(_kv_write_kernel, page=page)
+    new_k, new_v = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,      # page_idx, row
+            grid=(B,),
+            in_specs=[
+                pl.BlockSpec((1, 1, Hkv, D), lambda b, pi, ri: (b, 0, 0, 0)),
+                pl.BlockSpec((1, 1, Hkv, D), lambda b, pi, ri: (b, 0, 0, 0)),
+                pl.BlockSpec((1, page, Hkv, D), lambda b, pi, ri: (pi[b], 0, 0, 0)),
+                pl.BlockSpec((1, page, Hkv, D), lambda b, pi, ri: (pi[b], 0, 0, 0)),
+            ],
+            out_specs=[
+                pl.BlockSpec((1, page, Hkv, D), lambda b, pi, ri: (pi[b], 0, 0, 0)),
+                pl.BlockSpec((1, page, Hkv, D), lambda b, pi, ri: (pi[b], 0, 0, 0)),
+            ],
+        ),
+        out_shape=[
+            jax.ShapeDtypeStruct(k_pool.shape, k_pool.dtype),
+            jax.ShapeDtypeStruct(v_pool.shape, v_pool.dtype),
+        ],
+        # pools are donated: operand indices count the scalar-prefetch args
+        # (page_idx=0, row=1, k_new=2, v_new=3, k_pool=4, v_pool=5)
+        input_output_aliases={4: 0, 5: 1},
+        interpret=interpret,
+    )(
+        page_idx.astype(jnp.int32), row.astype(jnp.int32),
+        k_new, v_new, k_pool, v_pool,
+    )
+    return new_k, new_v

@@ -2,6 +2,13 @@
 
     PYTHONPATH=src python -m repro.launch.serve --arch molmim-65m --smoke \
         --batch 4 --prompt-len 16 --gen 16
+
+Continuous-batching mode drives the slot engine instead of a static
+batch; ``--cache-layout paged`` serves from the paged KV cache (block
+tables + Pallas paged attention / scatter writes):
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2-7b --smoke \
+        --continuous --cache-layout paged --page-size 16 --requests 16
 """
 from __future__ import annotations
 
@@ -13,7 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, get_smoke_config
-from repro.core.config import ParallelConfig
+from repro.core.config import ParallelConfig, ServeConfig
 from repro.models.model import build_model
 
 
@@ -41,6 +48,39 @@ def generate(
     return toks, (toks.size / dt)
 
 
+def serve_continuous(model, params, sc: ServeConfig, *, gen: int,
+                     prompt_len: int, requests: int) -> None:
+    """Drive the continuous-batching engine (dense or paged KV cache)."""
+    from repro.serving.engine import Engine, Request
+
+    cfg = model.cfg
+    rng = np.random.default_rng(0)
+    eng = Engine(
+        model, params, slots=sc.batch_size, max_len=sc.max_seq_len,
+        cache_layout=sc.cache_layout, page_size=sc.page_size,
+    )
+    t0 = time.time()
+    for i in range(requests):
+        L = int(rng.integers(max(1, prompt_len // 2), prompt_len + 1))
+        eng.submit(Request(
+            uid=i,
+            prompt=rng.integers(5, cfg.vocab_size, size=L).astype(np.int32),
+            max_new=gen,
+        ))
+    done = eng.run()
+    wall = time.time() - t0
+    toks = sum(len(r.output) for r in done)
+    ttft = np.mean([r.t_first - r.t_submit for r in done]) * 1e3
+    itl = np.mean([
+        (r.t_done - r.t_first) / max(len(r.output) - 1, 1) for r in done
+    ]) * 1e3
+    print(
+        f"[{sc.cache_layout}] served {len(done)} requests / {toks} tokens "
+        f"on {eng.B} slots: {toks / wall:.1f} tok/s, "
+        f"ttft {ttft:.1f}ms, itl {itl:.2f}ms"
+    )
+
+
 def main() -> None:
     p = argparse.ArgumentParser()
     p.add_argument("--arch", default="molmim-65m")
@@ -49,11 +89,26 @@ def main() -> None:
     p.add_argument("--prompt-len", type=int, default=16)
     p.add_argument("--gen", type=int, default=16)
     p.add_argument("--temperature", type=float, default=0.0)
+    p.add_argument("--continuous", action="store_true",
+                   help="continuous-batching engine instead of a static batch")
+    p.add_argument("--cache-layout", choices=("dense", "paged"),
+                   default="dense")
+    p.add_argument("--page-size", type=int, default=16)
+    p.add_argument("--requests", type=int, default=16)
     a = p.parse_args()
 
     cfg = get_smoke_config(a.arch) if a.smoke else get_config(a.arch)
     model = build_model(cfg, ParallelConfig(), None)
     params = model.init(jax.random.PRNGKey(0))
+    if a.continuous:
+        sc = ServeConfig(
+            max_seq_len=a.prompt_len + a.gen + cfg.num_frontend_tokens + 1,
+            batch_size=a.batch, temperature=a.temperature,
+            cache_layout=a.cache_layout, page_size=a.page_size,
+        )
+        serve_continuous(model, params, sc, gen=a.gen,
+                         prompt_len=a.prompt_len, requests=a.requests)
+        return
     rng = np.random.default_rng(0)
     batch = {
         "tokens": jnp.asarray(

@@ -81,6 +81,7 @@ def attention_apply(
     causal: Optional[bool] = None,
     cross_kv: Optional[jax.Array] = None,    # encoder output for cross-attn
     window: Optional[int] = None,
+    block_table: Optional[jax.Array] = None,  # (B, pages_per_seq) paged layout
 ) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
     B, S, _ = x.shape
     causal = cfg.causal if causal is None else causal
@@ -112,6 +113,34 @@ def attention_apply(
                 positions = jnp.arange(S)
         q = rope(q, positions, cfg.rope_theta)
         k = rope(k, positions, cfg.rope_theta)
+
+    if mode == "decode" and cache is not None and "k_pool" in cache:
+        # paged layout (serving engine): per-slot positions, block-table
+        # indirection into the shared page pool.  The token insert is an
+        # O(B·page) scatter (ops.paged_kv_update) — not the O(B·T) masked
+        # select of the dense per-slot path below.
+        assert block_table is not None and jnp.ndim(cache_pos) == 1
+        page = cache["k_pool"].shape[1]
+        capacity = block_table.shape[1] * page
+        cp = jnp.minimum(cache_pos.astype(jnp.int32), capacity - 1)
+        page_idx = jnp.take_along_axis(
+            block_table, (cp // page)[:, None], axis=1
+        )[:, 0]
+        k_pool, v_pool = ops.paged_kv_update(
+            cache["k_pool"], cache["v_pool"], k, v, page_idx, cp % page,
+            impl=cfg.kernel_impl,
+        )
+        # pool sharding: KV heads over `model` (TP serving) — the page axis
+        # stays local so block-table gathers never cross devices
+        k_pool = ctx.cons(k_pool, None, None, "kv_tp", None)
+        v_pool = ctx.cons(v_pool, None, None, "kv_tp", None)
+        lengths = jnp.minimum(cache_pos + 1, jnp.int32(capacity))
+        o = ops.paged_decode_attention(
+            q, k_pool, v_pool, block_table, lengths,
+            softcap=cfg.attn_logit_softcap, impl=cfg.kernel_impl,
+        )
+        new_cache = {"k_pool": k_pool, "v_pool": v_pool}
+        return _out_proj(cfg, ctx, params, o), new_cache
 
     if mode == "decode":
         assert cache is not None and cache_pos is not None
@@ -180,4 +209,21 @@ def init_cache(
     return {
         "k": jnp.zeros((batch, T, cfg.num_kv_heads, hd), dtype),
         "v": jnp.zeros((batch, T, cfg.num_kv_heads, hd), dtype),
+    }
+
+
+def init_paged_cache(
+    cfg: ModelConfig, num_pages: int, page_size: int, dtype=jnp.bfloat16
+) -> Dict[str, jax.Array]:
+    """Shared K/V page pool for one layer (block table lives with the
+    engine cache top-level — it is identical across layers)."""
+    if cfg.sliding_window:
+        raise ValueError(
+            "cache_layout='paged' does not support sliding-window (rolling) "
+            "caches — use the dense layout"
+        )
+    hd = cfg.resolved_head_dim
+    return {
+        "k_pool": jnp.zeros((num_pages, page_size, cfg.num_kv_heads, hd), dtype),
+        "v_pool": jnp.zeros((num_pages, page_size, cfg.num_kv_heads, hd), dtype),
     }

@@ -117,13 +117,13 @@ class Model:
 
     def _backbone(
         self, params, x, *, mode, positions=None, caches=None, cache_pos=None,
-        cross_kv=None,
+        cross_kv=None, block_table=None,
     ):
         cfg = self.cfg
         x, new_caches, aux = T.decoder_stack(
             cfg, self.ctx, params["layers"], x,
             mode=mode, positions=positions, caches=caches,
-            cache_pos=cache_pos, cross_kv=cross_kv,
+            cache_pos=cache_pos, cross_kv=cross_kv, block_table=block_table,
         )
         x = L.norm_apply(cfg, params["final_norm"], x)
         return x, new_caches, aux
@@ -189,8 +189,16 @@ class Model:
         return loss, metrics
 
     # ------------------------------------------------------------ serving
-    def prefill(self, params, batch, max_len: int):
-        """Full-sequence forward; returns (last_logits, cache)."""
+    def prefill(self, params, batch, max_len: int, *, length=None):
+        """Full-sequence forward; returns (last_logits, cache).
+
+        ``length`` (traced scalar ok): the number of VALID tokens when the
+        prompt is right-padded to a bucket (engine prompt bucketing) — the
+        returned logits come from row ``length - 1`` and the cache position
+        is ``length``.  Right padding is only sound for causal attention
+        (pad rows are in the future of every real row); the engine gates
+        bucketing accordingly.
+        """
         cfg = self.cfg
         cross_kv = self._encode(params, batch) if cfg.is_encoder_decoder else None
         x, _ = self._decoder_input(params, batch, "prefill")
@@ -199,9 +207,14 @@ class Model:
             params, x, mode="prefill", cross_kv=cross_kv
         )
         caches = self._pad_caches(caches, S, max_len)
-        last = x[:, -1:, :]
+        if length is None:
+            last = x[:, -1:, :]
+            pos = jnp.int32(S)
+        else:
+            pos = jnp.asarray(length, jnp.int32)
+            last = jax.lax.dynamic_slice_in_dim(x, pos - 1, 1, axis=1)
         lg = self.logits(params, last)
-        cache = {"layers": caches, "pos": jnp.int32(S)}
+        cache = {"layers": caches, "pos": pos}
         return lg, cache
 
     def decode_step(self, params, cache, tokens: jax.Array):
@@ -219,15 +232,41 @@ class Model:
         )
         x = self.ctx.cons(x, "batch", None, None)
         rope_pos = None if vec else jnp.full((1,), pos, jnp.int32)
+        block_table = cache.get("block_table")
         x, new_caches, _ = self._backbone(
             params, x, mode="decode",
             positions=rope_pos,
-            caches=cache["layers"], cache_pos=pos,
+            caches=cache["layers"], cache_pos=pos, block_table=block_table,
         )
         lg = self.logits(params, x)
-        return lg, {"layers": new_caches, "pos": pos + 1}
+        new_cache = {"layers": new_caches, "pos": pos + 1}
+        if block_table is not None:
+            new_cache["block_table"] = block_table
+        return lg, new_cache
 
-    def init_cache(self, batch: int, max_len: int, cross_len: int = 0):
+    def init_cache(
+        self, batch: int, max_len: int, cross_len: int = 0, *,
+        layout: str = "dense", page_size: int = 0, num_pages: int = 0,
+    ):
+        """Preallocated decode cache.
+
+        ``layout="paged"`` builds shared K/V page pools plus a top-level
+        ``block_table`` (all-null-page) the serving engine's allocator
+        maintains; ``pos`` is per-slot ``(batch,)`` in that layout.
+        """
+        if layout == "paged":
+            if page_size <= 0 or num_pages <= 1:
+                raise ValueError("paged layout needs page_size>0, num_pages>1")
+            pages_per_seq = -(-max_len // page_size)
+            return {
+                "layers": T.init_stack_cache(
+                    self.cfg, batch, max_len, self.policy.cdt,
+                    cross_len=cross_len, layout="paged",
+                    page_size=page_size, num_pages=num_pages,
+                ),
+                "block_table": jnp.zeros((batch, pages_per_seq), jnp.int32),
+                "pos": jnp.zeros((batch,), jnp.int32),
+            }
         return {
             "layers": T.init_stack_cache(
                 self.cfg, batch, max_len, self.policy.cdt, cross_len=cross_len

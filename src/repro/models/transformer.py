@@ -87,6 +87,7 @@ def _apply_sublayer(
     cache_pos,
     cross_kv,
     causal: Optional[bool] = None,
+    block_table=None,
 ) -> Tuple[jax.Array, Any, jax.Array]:
     """Returns (x, new_cache, aux_loss)."""
     aux = jnp.zeros((), jnp.float32)
@@ -98,7 +99,7 @@ def _apply_sublayer(
             cfg, ctx, params["attn"], h,
             positions=positions, mode=mode,
             cache=cache.get("attn") if cache else None,
-            cache_pos=cache_pos, causal=causal,
+            cache_pos=cache_pos, causal=causal, block_table=block_table,
         )
         if c is not None:
             new_cache["attn"] = c
@@ -180,6 +181,7 @@ def decoder_stack(
     cache_pos=None,
     cross_kv=None,
     causal: Optional[bool] = None,
+    block_table=None,         # (B, pages_per_seq): paged decode (all layers)
 ) -> Tuple[jax.Array, Any, jax.Array]:
     """Runs the full layer stack.  Returns (x, new_caches, aux_loss_sum)."""
     u = unit_size(cfg)
@@ -195,6 +197,7 @@ def decoder_stack(
                 mode=mode, positions=positions,
                 cache=ucache.get(sub) if ucache else None,
                 cache_pos=cache_pos, cross_kv=cross_kv, causal=causal,
+                block_table=block_table,
             )
             aux_sum = aux_sum + aux
             if nc:
@@ -242,17 +245,28 @@ def decoder_stack(
 
 
 def init_stack_cache(
-    cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16, cross_len: int = 0
+    cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16,
+    cross_len: int = 0, *, layout: str = "dense", page_size: int = 0,
+    num_pages: int = 0,
 ):
-    """Preallocated decode cache, stacked over scan units."""
+    """Preallocated decode cache, stacked over scan units.
+
+    ``layout="paged"`` replaces each attention layer's dense per-slot
+    ``(B, T, Hkv, D)`` buffers with a shared ``(num_pages, page, Hkv, D)``
+    pool; SSM and cross-attention state stay dense per-slot.
+    """
     from repro.models.attention import init_cache as init_attn_cache
+    from repro.models.attention import init_paged_cache
 
     u = unit_size(cfg)
     unit = {}
     for i in range(u):
         sub: Dict[str, Any] = {}
         if cfg.is_attn_layer(i):
-            sub["attn"] = init_attn_cache(cfg, batch, max_len, dtype)
+            if layout == "paged":
+                sub["attn"] = init_paged_cache(cfg, num_pages, page_size, dtype)
+            else:
+                sub["attn"] = init_attn_cache(cfg, batch, max_len, dtype)
         else:
             sub["ssm"] = init_ssm_cache(cfg, batch, dtype)
         if cfg.is_encoder_decoder and cross_len:

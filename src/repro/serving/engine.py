@@ -6,16 +6,33 @@ per-slot-position decode path:
 
   * a fixed pool of B slots shares one preallocated KV cache
     (``Model.init_cache`` with a (B,) position vector);
-  * an admitted request is prefilled alone (batch-1) and its cache slice
-    is written into its slot (tree-wide dynamic_update_slice on the batch
-    axis) — decoding of other slots is never paused for padding;
+  * an admitted request is prefilled alone (batch-1) and its cache is
+    inserted into its slot — decoding of other slots is never paused for
+    padding;
   * every engine step decodes ALL active slots in lockstep hardware-wise
     but with independent positions; finished slots (eos / max tokens) are
     released and refilled from the queue immediately.
 
-The per-slot cache write in attention is a masked O(B·T) update — the
-production path is a paged cache + Pallas scatter; iteration-level
-semantics here are identical.
+Two cache layouts:
+
+``cache_layout="dense"``
+    One (B, max_len) KV buffer per layer; the per-slot decode write is a
+    masked O(B·max_len) select.  Simple, always available.
+
+``cache_layout="paged"`` — the production path
+    Fixed-size pages of a shared pool, mapped per slot by a block table
+    (``paged_cache.PageAllocator``).  Admission reserves the request's
+    full budget (prompt + max_new) — capacity-aware: a request that does
+    not fit waits in the queue, one that can never fit is rejected at
+    submit.  Release returns pages to the free list for immediate reuse.
+    The decode write is an O(B·page) Pallas scatter and attention reads
+    K/V through the block table (``kernels/paged_attention.py``).
+
+Prompt bucketing: prompts are right-padded to power-of-2 buckets so the
+jitted prefill compiles once per bucket instead of once per unique prompt
+length.  Sound only for causal attention-only stacks (pad rows sit in the
+future of every real row; SSM state would carry pad garbage), so it is
+auto-disabled elsewhere.
 """
 from __future__ import annotations
 
@@ -28,6 +45,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.model import Model
+from repro.serving.paged_cache import (
+    NULL_PAGE,
+    PageAllocator,
+    pages_for,
+    write_slot_paged,
+)
 
 
 @dataclasses.dataclass
@@ -45,14 +68,42 @@ class Request:
 
 class Engine:
     def __init__(self, model: Model, params, *, slots: int, max_len: int,
-                 extra_batch: Optional[Dict[str, Any]] = None):
+                 extra_batch: Optional[Dict[str, Any]] = None,
+                 cache_layout: str = "dense", page_size: int = 16,
+                 num_pages: int = 0, bucket_prompts: Optional[bool] = None):
         self.model = model
         self.params = params
         self.B = slots
         self.max_len = max_len
         self.extra = extra_batch or {}
-        cross = model.cfg.num_frontend_tokens if model.cfg.is_encoder_decoder else 0
-        cache = model.init_cache(slots, max_len, cross_len=cross)
+        cfg = model.cfg
+        self.layout = cache_layout
+        # frontend rows are prepended only when the batch actually carries
+        # img_embeds (_decoder_input); a vision model served text-only has
+        # no frontend rows in its prefill
+        self.n_front = (
+            cfg.num_frontend_tokens
+            if cfg.frontend == "vision_stub" and "img_embeds" in self.extra
+            else 0
+        )
+        cross = cfg.num_frontend_tokens if cfg.is_encoder_decoder else 0
+
+        if cache_layout == "paged":
+            # default pool: every slot can hold a full max_len sequence,
+            # +1 for the reserved null page — admission then only queues
+            # on slot pressure, like the dense layout.
+            pages_per_seq = pages_for(max_len, page_size)
+            num_pages = num_pages or 1 + slots * pages_per_seq
+            self.alloc = PageAllocator(num_pages, page_size, slots, max_len)
+            cache = model.init_cache(
+                slots, max_len, cross_len=cross,
+                layout="paged", page_size=page_size, num_pages=num_pages,
+            )
+        elif cache_layout == "dense":
+            self.alloc = None
+            cache = model.init_cache(slots, max_len, cross_len=cross)
+        else:
+            raise ValueError(f"unknown cache_layout {cache_layout!r}")
         cache["pos"] = jnp.zeros((slots,), jnp.int32)
         self.cache = cache
         self.slot_req: List[Optional[Request]] = [None] * slots
@@ -61,16 +112,54 @@ class Engine:
         self.queue: List[Request] = []
         self.done: List[Request] = []
 
-        self._prefill = jax.jit(lambda p, b: model.prefill(p, b, max_len))
+        if bucket_prompts is None:
+            # right-padding is only sound when pad rows stay in every real
+            # row's future: causal attention, no SSM state carry, and no
+            # rolling (sliding-window) cache placement
+            has_ssm = any(
+                not cfg.is_attn_layer(i) for i in range(cfg.num_layers)
+            )
+            bucket_prompts = (
+                cfg.causal and not has_ssm and not cfg.sliding_window
+            )
+        self.bucket_prompts = bucket_prompts
+
+        self._prefill = jax.jit(
+            lambda p, b, L: model.prefill(p, b, max_len, length=L)
+        )
         self._decode = jax.jit(model.decode_step)
+        self._insert_paged = jax.jit(write_slot_paged)
 
     # -------------------------------------------------------------- admin
     def submit(self, req: Request) -> None:
+        need = len(req.prompt) + self.n_front + req.max_new
+        if need > self.max_len:
+            raise ValueError(
+                f"request {req.uid}: prompt+max_new = {need} tokens "
+                f"overflows max_len {self.max_len}"
+            )
+        if self.alloc is not None and not self.alloc.fits_slot(need):
+            raise ValueError(
+                f"request {req.uid}: {need} tokens can never fit the page "
+                f"pool ({self.alloc.num_pages - 1} usable pages of "
+                f"{self.alloc.page_size})"
+            )
         req.t_submit = time.time()
         self.queue.append(req)
 
+    def _bucket(self, n: int) -> int:
+        """Pad prompt length to a power-of-2 bucket (min 8, capped at the
+        longest prompt max_len admits) so prefill stops recompiling per
+        unique length."""
+        if not self.bucket_prompts:
+            return n
+        b = 8
+        while b < n:
+            b *= 2
+        return min(b, self.max_len - self.n_front)
+
     def _write_slot(self, slot: int, one_cache, pos: int) -> None:
-        """Insert a batch-1 prefilled cache into slot `slot`."""
+        """Insert a batch-1 prefilled cache into slot `slot` (dense)."""
 
         def put(dst, src):
             # stacked leaves: (units, B, ...) — batch axis 1; scalar 'pos'
@@ -85,17 +174,47 @@ class Engine:
         )
         self.cache["pos"] = self.cache["pos"].at[slot].set(pos)
 
+    def _write_slot_paged(self, slot: int, one_cache, pos: int,
+                          pages: np.ndarray, n_tiles: int) -> None:
+        """Scatter a batch-1 prefilled cache into `slot`'s pool pages."""
+        ids = np.full((n_tiles,), NULL_PAGE, np.int32)
+        ids[: min(n_tiles, len(pages))] = pages[:n_tiles]
+        self.cache["layers"] = self._insert_paged(
+            self.cache["layers"], one_cache["layers"], slot,
+            jnp.asarray(ids),
+        )
+        self.cache["block_table"] = jnp.asarray(self.alloc.table)
+        self.cache["pos"] = self.cache["pos"].at[slot].set(pos)
+
     def _admit(self) -> None:
         for slot in range(self.B):
             if self.slot_req[slot] is not None or not self.queue:
                 continue
-            req = self.queue.pop(0)
-            batch = {"tokens": jnp.asarray(req.prompt[None, :], jnp.int32)}
+            req = self.queue[0]
+            L = len(req.prompt)
+            need = L + self.n_front + req.max_new
+            if self.alloc is not None and not self.alloc.can_admit(need):
+                # head-of-line blocking keeps FIFO order: wait for pages
+                break
+            self.queue.pop(0)
+            Sb = self._bucket(L)
+            prompt = req.prompt
+            if Sb != L:
+                prompt = np.zeros((Sb,), np.int32)
+                prompt[:L] = req.prompt
+            batch = {"tokens": jnp.asarray(prompt[None, :], jnp.int32)}
             for k, v in self.extra.items():
                 batch[k] = v
-            logits, one_cache = self._prefill(self.params, batch)
+            Lx = L + self.n_front          # valid decoder-input tokens
+            logits, one_cache = self._prefill(self.params, batch, Lx)
             nxt = int(jnp.argmax(logits[0, -1]))
-            self._write_slot(slot, one_cache, int(one_cache["pos"]))
+            if self.alloc is not None:
+                pages = self.alloc.alloc(slot, need)
+                page = self.alloc.page_size
+                n_tiles = pages_for(Sb + self.n_front, page)
+                self._write_slot_paged(slot, one_cache, Lx, pages, n_tiles)
+            else:
+                self._write_slot(slot, one_cache, int(one_cache["pos"]))
             req.output = [nxt]
             req.t_first = time.time()
             self.slot_req[slot] = req
@@ -110,6 +229,9 @@ class Engine:
         self.done.append(req)
         self.slot_req[slot] = None
         self.slot_left[slot] = 0
+        if self.alloc is not None:
+            self.alloc.release(slot)
+            self.cache["block_table"] = jnp.asarray(self.alloc.table)
 
     # --------------------------------------------------------------- step
     def step(self) -> int:
@@ -129,12 +251,14 @@ class Engine:
             self.slot_left[s] -= 1
             if int(nxt[s]) == req.eos_id or self.slot_left[s] <= 0:
                 self._finish(s)
-        # inactive slots also stepped (lockstep hardware batch) — their
-        # positions advanced harmlessly; reset them to 0 for cleanliness
+        # inactive slots also stepped (lockstep hardware batch): their
+        # positions advanced harmlessly — reset them to 0 so a stale slot
+        # is re-admitted with clean pos semantics (paged: their writes all
+        # land on the null page)
         inactive = [s for s in range(self.B) if self.slot_req[s] is None]
         if inactive:
             pos = np.array(self.cache["pos"])  # copy (device arrays are RO)
-            pos[inactive] = np.minimum(pos[inactive], self.max_len - 1)
+            pos[inactive] = 0
             self.cache["pos"] = jnp.asarray(pos)
         return len(active)
 

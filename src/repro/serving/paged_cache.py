@@ -1,0 +1,187 @@
+"""Block-table page allocator for the paged KV-cache serving subsystem.
+
+The paged layout stores every sequence's KV tokens in fixed-size *pages*
+of a pool shared by all slots (``(num_pages, page, Hkv, D)`` per
+attention layer).  A host-side :class:`PageAllocator` owns the mapping:
+
+  * a free list of physical page ids — released pages are reused
+    immediately (LIFO keeps recently-touched pages warm);
+  * a (slots, pages_per_seq) block table of physical page ids, the device
+    copy of which the Pallas paged-attention kernel indexes through
+    scalar prefetch (``kernels/paged_attention.py``);
+  * capacity-aware admission: :meth:`can_admit` answers whether a request
+    (prompt + generation budget) fits in the free pool *and* in one
+    slot's table — a long request is refused up front instead of
+    silently overflowing a slot.
+
+Page 0 is reserved as the **null page**: unallocated block-table entries
+point at it, so inactive slots read/write only garbage that belongs to no
+sequence.  The allocator never hands out page 0.
+
+The engine's admission policy reserves a sequence's full budget
+(``prompt + max_new`` tokens) at admission, so decode can never run out
+of pages mid-request; :meth:`append` exists for callers that prefer lazy
+per-token growth and is exercised by the property tests.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import jax
+import numpy as np
+
+from repro.kernels import tiling
+
+NULL_PAGE = 0
+
+
+def pages_for(tokens: int, page_size: int) -> int:
+    return -(-tokens // page_size)
+
+
+class PageAllocator:
+    def __init__(self, num_pages: int, page_size: int, slots: int, max_len: int):
+        if num_pages < 2:
+            raise ValueError("need at least 2 pages (page 0 is the null page)")
+        self.num_pages = num_pages
+        self.page_size = page_size
+        self.slots = slots
+        self.pages_per_seq = pages_for(max_len, page_size)
+        self.capacity = self.pages_per_seq * page_size
+        # LIFO free list over pages 1..num_pages-1 (0 = null page)
+        self._free: List[int] = list(range(num_pages - 1, 0, -1))
+        self._owned: List[List[int]] = [[] for _ in range(slots)]
+        self._tokens: List[int] = [0] * slots
+        self.table = np.full((slots, self.pages_per_seq), NULL_PAGE, np.int32)
+
+    # ------------------------------------------------------------- query
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    def owned(self, slot: int) -> List[int]:
+        return list(self._owned[slot])
+
+    def can_admit(self, tokens: int) -> bool:
+        """True iff `tokens` fit in one slot's table and the free pool."""
+        need = pages_for(tokens, self.page_size)
+        return need <= self.pages_per_seq and need <= len(self._free)
+
+    def fits_slot(self, tokens: int) -> bool:
+        """True iff `tokens` can EVER fit (ignores current free pool)."""
+        need = pages_for(tokens, self.page_size)
+        return need <= self.pages_per_seq and need <= self.num_pages - 1
+
+    # ------------------------------------------------------------- mutate
+    def alloc(self, slot: int, tokens: int) -> np.ndarray:
+        """Reserve pages for `tokens` tokens in `slot`; returns page ids."""
+        if self._owned[slot]:
+            raise RuntimeError(f"slot {slot} already holds pages")
+        need = pages_for(tokens, self.page_size)
+        if need > self.pages_per_seq:
+            raise ValueError(
+                f"{tokens} tokens need {need} pages > pages_per_seq "
+                f"{self.pages_per_seq} — request overflows the slot"
+            )
+        if need > len(self._free):
+            raise RuntimeError(f"out of pages: need {need}, free {len(self._free)}")
+        pages = [self._free.pop() for _ in range(need)]
+        self._owned[slot] = pages
+        self._tokens[slot] = tokens
+        self.table[slot, :need] = pages
+        self.table[slot, need:] = NULL_PAGE
+        return np.asarray(pages, np.int32)
+
+    def append(self, slot: int, n: int = 1) -> None:
+        """Extend `slot`'s reservation by `n` tokens (lazy growth)."""
+        if not self._owned[slot]:
+            raise RuntimeError(f"slot {slot} holds no pages")
+        tokens = self._tokens[slot] + n
+        need = pages_for(tokens, self.page_size)
+        have = len(self._owned[slot])
+        if need > self.pages_per_seq:
+            raise ValueError(f"append overflows slot {slot} ({tokens} tokens)")
+        if need - have > len(self._free):
+            raise RuntimeError("out of pages on append")
+        for j in range(have, need):
+            page = self._free.pop()
+            self._owned[slot].append(page)
+            self.table[slot, j] = page
+        self._tokens[slot] = tokens
+
+    def release(self, slot: int) -> int:
+        """Return `slot`'s pages to the free list; returns how many."""
+        pages = self._owned[slot]
+        if any(p in self._free for p in pages):  # pragma: no cover - guard
+            raise RuntimeError("double free detected")
+        self._free.extend(reversed(pages))
+        n = len(pages)
+        self._owned[slot] = []
+        self._tokens[slot] = 0
+        self.table[slot, :] = NULL_PAGE
+        return n
+
+    # ------------------------------------------------------------- checks
+    def check_invariants(self) -> None:
+        """No page leaked, none shared, none both free and owned."""
+        free = set(self._free)
+        assert len(free) == len(self._free), "duplicate pages in free list"
+        assert NULL_PAGE not in free, "null page entered the free list"
+        owned_all: List[int] = []
+        for slot, pages in enumerate(self._owned):
+            owned_all.extend(pages)
+            assert not free & set(pages), f"slot {slot} owns freed pages"
+            need = pages_for(self._tokens[slot], self.page_size)
+            assert len(pages) == need, (slot, len(pages), need)
+        assert len(set(owned_all)) == len(owned_all), "page owned twice"
+        assert len(free) + len(owned_all) == self.num_pages - 1, "page leak"
+
+
+# --------------------------------------------------------------------- #
+# prefill insertion: dense batch-1 cache -> pool pages + dense leaves
+# --------------------------------------------------------------------- #
+def write_slot_paged(
+    cache_layers: Dict,
+    one_layers: Dict,
+    slot,
+    page_ids: jax.Array,    # (n_pages,) physical pages for the prompt tiles
+):
+    """Insert a batch-1 prefilled cache into a paged engine cache.
+
+    Attention ``k``/``v`` leaves (dense ``(units, 1, W, Hkv, D)``) are cut
+    into page tiles and scattered to ``k_pool``/``v_pool`` at `page_ids`;
+    every other leaf (SSM state, cross-attn KV, lengths) is written into
+    the slot's batch row like the dense layout.  `page_ids` may be padded
+    with the null page — those tiles land on page 0 and are never read.
+
+    Jit-friendly: `slot` and `page_ids` can be traced (shapes static).
+    """
+    n_pages = page_ids.shape[0]
+
+    def put_dense(dst, src):
+        if dst.ndim == src.ndim and dst.ndim >= 2 and src.shape[1] == 1:
+            idx = (0, slot) + (0,) * (dst.ndim - 2)
+            return jax.lax.dynamic_update_slice(dst, src.astype(dst.dtype), idx)
+        return dst
+
+    def walk(dst, src):
+        if isinstance(dst, dict):
+            if "k_pool" in dst:
+                page = dst["k_pool"].shape[2]   # (units, P, page, Hkv, D)
+                out = dict(dst)
+                for pool_name, leaf_name in (("k_pool", "k"), ("v_pool", "v")):
+                    leaf = src[leaf_name]       # (units, 1, W, Hkv, D)
+                    u, _, W = leaf.shape[:3]
+                    rows = n_pages * page
+                    tiles = tiling.pad_dim(leaf[:, 0], 1, max(rows, W))[:, :rows]
+                    tiles = tiles.reshape(u, n_pages, page, *leaf.shape[3:])
+                    out[pool_name] = dst[pool_name].at[:, page_ids].set(
+                        tiles.astype(dst[pool_name].dtype)
+                    )
+                return out
+            return {
+                k: walk(v, src[k]) if k in src else v for k, v in dst.items()
+            }
+        return put_dense(dst, src)
+
+    return walk(cache_layers, one_layers)

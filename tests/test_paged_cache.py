@@ -1,0 +1,281 @@
+"""Paged KV-cache serving subsystem: allocator invariants, paged kernel
+parity against the dense decode path, and engine-level layout parity."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.config import ModelConfig
+from repro.kernels import ops
+from repro.models.model import build_model
+from repro.serving.engine import Engine, Request
+from repro.serving.paged_cache import NULL_PAGE, PageAllocator, pages_for
+
+
+# --------------------------------------------------------------------- #
+# allocator properties
+# --------------------------------------------------------------------- #
+def test_allocator_basic():
+    al = PageAllocator(num_pages=9, page_size=4, slots=2, max_len=16)
+    assert al.pages_per_seq == 4 and al.free_pages == 8
+    pages = al.alloc(0, 10)                     # 3 pages
+    assert len(pages) == 3 and NULL_PAGE not in pages
+    assert al.free_pages == 5
+    assert list(al.table[0, :3]) == list(pages)
+    assert all(p == NULL_PAGE for p in al.table[0, 3:])
+    al.check_invariants()
+    assert al.release(0) == 3
+    assert al.free_pages == 8
+    al.check_invariants()
+
+
+def test_allocator_capacity_refusal():
+    al = PageAllocator(num_pages=5, page_size=4, slots=2, max_len=16)
+    assert not al.can_admit(17)                 # > pages_per_seq * page
+    assert not al.fits_slot(17)
+    assert al.can_admit(16)
+    al.alloc(0, 12)                             # 3 of 4 usable pages
+    assert not al.can_admit(8)                  # only 1 page free
+    assert al.can_admit(4)
+    with pytest.raises(RuntimeError):
+        al.alloc(1, 8)                          # out of pages
+    with pytest.raises(RuntimeError):
+        al.alloc(0, 4)                          # slot already holds pages
+    al.check_invariants()
+
+
+def test_allocator_append_page_boundary():
+    al = PageAllocator(num_pages=9, page_size=4, slots=1, max_len=32)
+    al.alloc(0, 3)
+    assert len(al.owned(0)) == 1
+    al.append(0)                                # 4 tokens: still 1 page
+    assert len(al.owned(0)) == 1
+    al.append(0)                                # 5 tokens: new page
+    assert len(al.owned(0)) == 2
+    al.check_invariants()
+    with pytest.raises(ValueError):
+        al.append(0, n=64)                      # overflows the slot
+
+
+def test_allocator_churn_no_leak_no_double_alloc():
+    """Randomized admit/append/release churn keeps every invariant: pages
+    are never shared, never both free and owned, and never leak."""
+    rng = np.random.default_rng(0)
+    al = PageAllocator(num_pages=17, page_size=4, slots=4, max_len=24)
+    active = {}
+    for _ in range(500):
+        op = rng.integers(0, 3)
+        slot = int(rng.integers(0, 4))
+        if op == 0 and slot not in active:
+            tokens = int(rng.integers(1, 25))
+            if al.can_admit(tokens):
+                pages = al.alloc(slot, tokens)
+                assert len(set(pages)) == len(pages)
+                active[slot] = tokens
+        elif op == 1 and slot in active:
+            grown = active[slot] + 1
+            if (pages_for(grown, 4) <= al.pages_per_seq
+                    and pages_for(grown, 4) - len(al.owned(slot))
+                    <= al.free_pages):
+                al.append(slot)
+                active[slot] = grown
+        elif op == 2 and slot in active:
+            al.release(slot)
+            del active[slot]
+        al.check_invariants()
+        # cross-slot disjointness of the block table's live entries
+        live = [p for s in active for p in al.owned(s)]
+        assert len(set(live)) == len(live)
+    for slot in list(active):
+        al.release(slot)
+    al.check_invariants()
+    assert al.free_pages == al.num_pages - 1
+
+
+# --------------------------------------------------------------------- #
+# kernel parity: paged vs dense decode
+# --------------------------------------------------------------------- #
+def _random_paged(rng, B, Hkv, D, page, pps):
+    P = 1 + B * pps
+    k_pool = jnp.asarray(rng.normal(size=(P, page, Hkv, D)), jnp.float32)
+    v_pool = jnp.asarray(rng.normal(size=(P, page, Hkv, D)), jnp.float32)
+    # each slot owns a disjoint shuffled set of pages
+    perm = rng.permutation(np.arange(1, P))
+    bt = jnp.asarray(perm.reshape(B, pps).astype(np.int32))
+    return k_pool, v_pool, bt
+
+
+@pytest.mark.parametrize("impl", ["xla", "pallas_interpret"])
+@pytest.mark.parametrize("softcap", [0.0, 20.0])
+def test_paged_decode_matches_dense(impl, softcap):
+    rng = np.random.default_rng(1)
+    B, H, Hkv, D, page, pps = 3, 4, 2, 16, 8, 4
+    q = jnp.asarray(rng.normal(size=(B, 1, H, D)), jnp.float32)
+    k_pool, v_pool, bt = _random_paged(rng, B, Hkv, D, page, pps)
+    lengths = jnp.asarray([20, 0, 32], jnp.int32)   # incl. empty slot
+
+    got = ops.paged_decode_attention(
+        q, k_pool, v_pool, bt, lengths, softcap=softcap, impl=impl
+    )
+    # dense reference: gather pages into a contiguous cache
+    k = jnp.take(k_pool, bt.reshape(-1), 0).reshape(B, pps * page, Hkv, D)
+    v = jnp.take(v_pool, bt.reshape(-1), 0).reshape(B, pps * page, Hkv, D)
+    want = ops.decode_attention(q, k, v, lengths, softcap=softcap, impl="xla")
+    np.testing.assert_allclose(got, want, atol=2e-5)
+
+
+@pytest.mark.parametrize("impl", ["xla", "pallas_interpret"])
+def test_paged_kv_update_scatter(impl):
+    rng = np.random.default_rng(2)
+    B, Hkv, D, page, pps = 3, 2, 16, 8, 4
+    k_pool, v_pool, bt = _random_paged(rng, B, Hkv, D, page, pps)
+    k_new = jnp.asarray(rng.normal(size=(B, 1, Hkv, D)), jnp.float32)
+    v_new = jnp.asarray(rng.normal(size=(B, 1, Hkv, D)), jnp.float32)
+    pos = np.asarray([5, 8, 31])
+    page_idx = jnp.asarray(
+        [int(bt[b, p // page]) for b, p in enumerate(pos)], jnp.int32
+    )
+    row = jnp.asarray(pos % page, jnp.int32)
+    nk, nv = ops.paged_kv_update(
+        k_pool, v_pool, k_new, v_new, page_idx, row, impl=impl
+    )
+    ek = k_pool.at[page_idx, row].set(k_new[:, 0])
+    ev = v_pool.at[page_idx, row].set(v_new[:, 0])
+    np.testing.assert_allclose(nk, ek, atol=0)
+    np.testing.assert_allclose(nv, ev, atol=0)
+
+
+def test_flash_decode_non_multiple_tail():
+    """flash_decode pads+masks cache lengths that don't divide block_t
+    (the PR-1 tail fix, extended to the decode kernel)."""
+    rng = np.random.default_rng(3)
+    B, H, Hkv, D, T = 2, 4, 2, 16, 100
+    q = jnp.asarray(rng.normal(size=(B, 1, H, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, T, Hkv, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, T, Hkv, D)), jnp.float32)
+    lengths = jnp.asarray([77, 100], jnp.int32)
+    from repro.kernels.flash_decode import flash_decode
+
+    got = flash_decode(q, k, v, lengths, block_t=64, interpret=True)
+    want = ops.decode_attention(q, k, v, lengths, impl="xla")
+    np.testing.assert_allclose(got, want, atol=2e-5)
+
+
+# --------------------------------------------------------------------- #
+# engine-level layout parity
+# --------------------------------------------------------------------- #
+def _build(kernel_impl="auto"):
+    cfg = ModelConfig(
+        name="t", family="dense", num_layers=2, d_model=64, num_heads=4,
+        num_kv_heads=2, d_ff=128, vocab_size=64, dtype="float32",
+        kernel_impl=kernel_impl,
+    )
+    model = build_model(cfg)
+    return model, model.init(jax.random.PRNGKey(0))
+
+
+def _serve(model, params, prompts, layout, max_new=5, **kw):
+    eng = Engine(
+        model, params, slots=2, max_len=64, cache_layout=layout,
+        page_size=8, **kw,
+    )
+    for i, p in enumerate(prompts):
+        eng.submit(Request(uid=i, prompt=p, max_new=max_new))
+    done = eng.run()
+    assert len(done) == len(prompts)
+    return eng, {r.uid: r.output for r in done}
+
+
+def test_engine_paged_matches_dense_xla():
+    model, params = _build()
+    rng = np.random.default_rng(4)
+    prompts = [rng.integers(0, 64, size=L).astype(np.int32)
+               for L in (5, 9, 7, 12, 6)]
+    _, dense = _serve(model, params, prompts, "dense")
+    eng, paged = _serve(model, params, prompts, "paged")
+    assert paged == dense
+    eng.alloc.check_invariants()
+    assert eng.alloc.free_pages == eng.alloc.num_pages - 1, "pages leaked"
+    # satellite fix: released slots come back with pos reset to 0
+    assert np.all(np.asarray(eng.cache["pos"]) == 0)
+
+
+def test_engine_paged_matches_dense_pallas_interpret():
+    model, params = _build("pallas_interpret")
+    rng = np.random.default_rng(5)
+    prompts = [rng.integers(0, 64, size=L).astype(np.int32) for L in (5, 9, 3)]
+    _, dense = _serve(model, params, prompts, "dense", max_new=4)
+    _, paged = _serve(model, params, prompts, "paged", max_new=4)
+    assert paged == dense
+
+
+def test_engine_paged_under_page_pressure():
+    """A pool far smaller than total demand forces queueing on pages;
+    every request still completes with identical outputs."""
+    model, params = _build()
+    rng = np.random.default_rng(6)
+    prompts = [rng.integers(0, 64, size=L).astype(np.int32)
+               for L in (5, 9, 7, 12, 6)]
+    _, dense = _serve(model, params, prompts, "dense")
+    # 3 usable pages of 8 = 24 tokens: one request at a time
+    eng, paged = _serve(model, params, prompts, "paged", num_pages=4)
+    assert paged == dense
+    assert eng.alloc.free_pages == eng.alloc.num_pages - 1
+
+
+def test_engine_rejects_impossible_requests():
+    model, params = _build()
+    eng = Engine(model, params, slots=1, max_len=32, cache_layout="paged",
+                 page_size=8)
+    with pytest.raises(ValueError):
+        eng.submit(Request(uid=0, prompt=np.zeros(30, np.int32), max_new=8))
+    eng2 = Engine(model, params, slots=1, max_len=32)
+    with pytest.raises(ValueError):
+        eng2.submit(Request(uid=0, prompt=np.zeros(30, np.int32), max_new=8))
+
+
+@pytest.mark.parametrize("layout", ["dense", "paged"])
+def test_engine_vision_frontend(layout):
+    """A vision_stub model counts frontend rows only when the batch really
+    carries img_embeds — text-only serving must match isolated decoding."""
+    cfg = ModelConfig(
+        name="t", family="vlm", num_layers=2, d_model=64, num_heads=4,
+        num_kv_heads=2, d_ff=128, vocab_size=64, dtype="float32",
+        frontend="vision_stub", num_frontend_tokens=4,
+    )
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(8)
+    img = jnp.asarray(rng.normal(size=(1, 4, 64)), jnp.float32)
+
+    for extra in ({}, {"img_embeds": img}):
+        prompts = [rng.integers(0, 64, size=L).astype(np.int32)
+                   for L in (5, 9, 7)]
+        eng = Engine(model, params, slots=2, max_len=64,
+                     cache_layout=layout, page_size=8, extra_batch=extra)
+        for i, p in enumerate(prompts):
+            eng.submit(Request(uid=i, prompt=p, max_new=5))
+        done = eng.run()
+        assert len(done) == len(prompts)
+        for req in done:
+            batch = {"tokens": jnp.asarray(prompts[req.uid][None], jnp.int32),
+                     **extra}
+            lg, cache = model.prefill(params, batch, 64)
+            want = [int(jnp.argmax(lg[0, -1]))]
+            for _ in range(4):
+                lg, cache = model.decode_step(
+                    params, cache, jnp.asarray([[want[-1]]], jnp.int32)
+                )
+                want.append(int(jnp.argmax(lg[0, -1])))
+            assert req.output == want, (extra.keys(), req.uid)
+
+
+def test_engine_bucketing_matches_unbucketed():
+    """Prompt bucketing (right-pad to pow-2) must not change any token."""
+    model, params = _build()
+    rng = np.random.default_rng(7)
+    prompts = [rng.integers(0, 64, size=L).astype(np.int32)
+               for L in (3, 11, 17, 6)]
+    _, on = _serve(model, params, prompts, "paged", bucket_prompts=True)
+    _, off = _serve(model, params, prompts, "paged", bucket_prompts=False)
+    assert on == off

@@ -3,6 +3,7 @@ decoding for every request, regardless of admission interleaving."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.core.config import ModelConfig
 from repro.models.model import build_model
@@ -35,12 +36,14 @@ def isolated_greedy(model, params, prompt, n):
     return out
 
 
-def test_engine_matches_isolated_decoding():
+@pytest.mark.parametrize("layout", ["dense", "paged"])
+def test_engine_matches_isolated_decoding(layout):
     model, params = build()
     rng = np.random.default_rng(0)
     prompts = [rng.integers(0, 64, size=L).astype(np.int32) for L in (5, 9, 7, 12, 6)]
     n_new = 6
-    eng = Engine(model, params, slots=2, max_len=64)
+    eng = Engine(model, params, slots=2, max_len=64, cache_layout=layout,
+                 page_size=8)
     for i, p in enumerate(prompts):
         eng.submit(Request(uid=i, prompt=p, max_new=n_new))
     done = eng.run()
