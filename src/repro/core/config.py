@@ -234,6 +234,14 @@ class ServeConfig:
     # (serving/paged_cache.py + kernels/paged_attention.py)
     cache_layout: str = "dense"
     page_size: int = 16        # tokens per page in the paged layout
+    # paged-layout serving features (serving/README.md):
+    #   prefix_cache — content-addressed sharing of full prompt blocks
+    #   (refcounted pages, copy-on-write, LRU eviction of unreferenced
+    #   cached pages); prefill skips hash-hit blocks entirely.
+    #   prefill_chunk — bound each prefill step to N tokens, interleaved
+    #   with decode iterations (0 = prefill the suffix in one chunk).
+    prefix_cache: bool = False
+    prefill_chunk: int = 0
 
 
 def reduced(mc: ModelConfig, **over: Any) -> ModelConfig:

@@ -302,6 +302,96 @@ def paged_decode_attention(
     return _decode_attention_xla(q, k_cache, v_cache, length, softcap=softcap)
 
 
+def paged_prefill_attention(
+    q: jax.Array,            # (B, S, H, D) chunk queries
+    k_pool: jax.Array,       # (num_pages, page, Hkv, D)
+    v_pool: jax.Array,
+    block_table: jax.Array,  # (B, pages_per_seq) int32
+    starts: jax.Array,       # (B,) logical position of each chunk's row 0
+    lengths: jax.Array,      # (B,) total valid context length (start+valid)
+    *,
+    softcap: float = 0.0,
+    impl: str = "auto",
+    interpret: bool = False,
+) -> jax.Array:
+    """Chunk/suffix prefill attention through a block-table paged KV pool.
+
+    Query row ``i`` of batch ``b`` sits at logical position
+    ``starts[b] + i`` and attends causally to every cache position
+    ``<= starts[b] + i`` (and ``< lengths[b]``) through the block table —
+    this is the read side of prefix caching (the chunk attends straight
+    into pages shared from the hash index) and of chunked prefill (each
+    chunk attends to all previously written chunks plus itself; the
+    chunk's own K/V must already be scattered into the pool, see
+    ``paged_kv_update_rows``).
+
+    ``pallas`` gathers K/V page tiles through the prefetched block table
+    inside the kernel grid; the ``xla``/``naive`` fallback gathers pages
+    into a dense cache and applies the shifted causal mask explicitly
+    (O(B·S·T) scores — the CPU/testing path; chunks are short).
+    """
+    impl, interpret = _resolve(impl, interpret)
+    if impl == "pallas":
+        from repro.kernels.paged_attention import paged_flash_prefill
+
+        return paged_flash_prefill(
+            q, k_pool, v_pool, block_table,
+            starts.astype(jnp.int32), lengths.astype(jnp.int32),
+            softcap=softcap, interpret=interpret,
+        )
+    B, S, H, D = q.shape
+    Hkv = k_pool.shape[2]
+    group = H // Hkv
+    scale = 1.0 / jnp.sqrt(jnp.asarray(D, jnp.float32))
+    k_cache = _gather_pages(k_pool, block_table)       # (B, T, Hkv, D)
+    v_cache = _gather_pages(v_pool, block_table)
+    T = k_cache.shape[1]
+    qg = q.reshape(B, S, Hkv, group, D)
+    s = jnp.einsum(
+        "bshgd,bthd->bhgst", qg, k_cache, preferred_element_type=jnp.float32
+    ) * scale                                          # (B, Hkv, g, S, T)
+    if softcap > 0.0:
+        s = softcap * jnp.tanh(s / softcap)
+    q_pos = starts[:, None] + jnp.arange(S)[None, :]   # (B, S)
+    k_pos = jnp.arange(T)
+    mask = (
+        (k_pos[None, None, :] <= q_pos[:, :, None])
+        & (k_pos[None, None, :] < lengths[:, None, None])
+    )                                                  # (B, S, T)
+    s = jnp.where(mask[:, None, None], s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    p = jnp.where(m <= NEG_INF / 2, 0.0, p)
+    denom = jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+    out = jnp.einsum(
+        "bhgst,bthd->bhgsd", (p / denom).astype(q.dtype), v_cache,
+        preferred_element_type=jnp.float32,
+    )                                                  # (B, Hkv, g, S, D)
+    out = jnp.transpose(out, (0, 3, 1, 2, 4)).reshape(B, S, H, D)
+    return out.astype(q.dtype)
+
+
+def paged_kv_update_rows(
+    k_pool: jax.Array,     # (num_pages, page, Hkv, D)
+    v_pool: jax.Array,
+    k_new: jax.Array,      # (S, Hkv, D) chunk K rows (batch-1 chunk)
+    v_new: jax.Array,
+    page_idx: jax.Array,   # (S,) physical page per row (null page = masked)
+    row: jax.Array,        # (S,) row within each page
+) -> Tuple[jax.Array, jax.Array]:
+    """Scatter a prefill chunk's K/V rows into the page pool.
+
+    O(S) rows of data move regardless of impl, so the jnp scatter IS the
+    efficient form on every backend (unlike the per-token decode write,
+    where the dense layout's masked select touches O(B·T) and the Pallas
+    page rewrite wins).  Masked rows target the null page 0; collisions
+    there are harmless garbage.
+    """
+    k_pool = k_pool.at[page_idx, row].set(k_new.astype(k_pool.dtype))
+    v_pool = v_pool.at[page_idx, row].set(v_new.astype(v_pool.dtype))
+    return k_pool, v_pool
+
+
 def paged_kv_update(
     k_pool: jax.Array,     # (num_pages, page, Hkv, D)
     v_pool: jax.Array,

@@ -1,9 +1,9 @@
-"""Pallas TPU paged-attention decode + paged KV scatter write.
+"""Pallas TPU paged-attention decode/prefill + paged KV scatter write.
 
 The serving engine's paged KV cache stores tokens in fixed-size pages of a
 shared pool (``(num_pages, page, Hkv, D)``); a per-slot block table maps
 logical cache positions to physical pages (``serving/paged_cache.py``).
-Two kernels make that layout a first-class decode path:
+Three kernels make that layout a first-class serving path:
 
 ``paged_flash_decode``
     The flash-decoding combine of ``flash_decode.py`` with the contiguous
@@ -15,6 +15,16 @@ Two kernels make that layout a first-class decode path:
     materialized (B, T) cache ever exists.  Combine state (m, l, acc)
     lives in VMEM scratch across the sequential page axis, exactly like
     the contiguous kernel.
+
+``paged_flash_prefill``
+    Chunked/suffix prefill attention through the same block table: the
+    query block is a whole *chunk* of ``S`` tokens sitting at logical
+    positions ``starts[b] + i`` (``starts`` supports prefix-cache skips
+    and chunked prefill — the chunk attends to every already-written
+    page, including pages shared from the prefix cache, plus itself,
+    under a causal mask shifted by the query offset).  Same grid and
+    VMEM running-LSE combine as the decode kernel, with (S·group) query
+    rows instead of ``group``.
 
 ``paged_kv_write``
     Per-token decode cache insert: grid (B,), each step rewrites ONE page
@@ -151,6 +161,136 @@ def paged_flash_decode(
         interpret=interpret,
     )(block_table.astype(jnp.int32), lengths.astype(jnp.int32), qg, k_pool, v_pool)
     return out.reshape(B, 1, H, D)
+
+
+# --------------------------------------------------------------------- #
+# chunked/suffix prefill attention through the block table
+# --------------------------------------------------------------------- #
+def _pp_kernel(
+    bt_ref,      # (B, pages_per_seq) scalar-prefetch block table
+    start_ref,   # (B,) scalar-prefetch query offset (first query's position)
+    len_ref,     # (B,) scalar-prefetch total valid context length
+    q_ref,       # (1, S, 1, group, D)
+    k_ref,       # (1, page, 1, D)  — the page picked by the index map
+    v_ref,
+    o_ref,       # (1, S, 1, group, D)
+    m_scr, l_scr, acc_scr,    # (S·group, 1/1/D)
+    *,
+    scale: float,
+    page: int,
+    p_steps: int,
+    group: int,
+    softcap: float,
+):
+    b = pl.program_id(0)
+    pi = pl.program_id(2)
+
+    @pl.when(pi == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    S = q_ref.shape[1]
+    q = q_ref[0, :, 0].astype(jnp.float32).reshape(S * group, -1)  # (S·g, D)
+    k = k_ref[0, :, 0].astype(jnp.float32)                         # (page, D)
+    v = v_ref[0, :, 0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale                                                      # (S·g, page)
+    if softcap > 0.0:
+        s = softcap * jnp.tanh(s / softcap)
+
+    # causal mask shifted by the query offset: query row r (token index
+    # r // group within the chunk) sits at logical position start + r//group
+    # and may attend to k positions <= its own; pages past the valid
+    # length (incl. the null page in unallocated entries) are masked out.
+    q_pos = start_ref[b] + (
+        jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) // group
+    )
+    k_pos = pi * page + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where((k_pos <= q_pos) & (k_pos < len_ref[b]), s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    p = jnp.where(m_new <= NEG_INF / 2, 0.0, p)
+    alpha = jnp.exp(m_prev - m_new)
+    m_scr[...] = m_new
+    l_scr[...] = alpha * l_scr[...] + jnp.sum(p, axis=-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+    @pl.when(pi == p_steps - 1)
+    def _final():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        out = (acc_scr[...] / denom).reshape(S, group, -1)
+        o_ref[0, :, 0] = out.astype(o_ref.dtype)
+
+
+def paged_flash_prefill(
+    q: jax.Array,            # (B, S, H, D) chunk queries
+    k_pool: jax.Array,       # (num_pages, page, Hkv, D)
+    v_pool: jax.Array,
+    block_table: jax.Array,  # (B, pages_per_seq) int32 physical page ids
+    starts: jax.Array,       # (B,) int32 logical position of query row 0
+    lengths: jax.Array,      # (B,) int32 total valid context (start + valid)
+    *,
+    softcap: float = 0.0,
+    interpret: bool = False,
+) -> jax.Array:
+    B, S, H, D = q.shape
+    page, Hkv = k_pool.shape[1], k_pool.shape[2]
+    pages_per_seq = block_table.shape[1]
+    assert H % Hkv == 0
+    group = H // Hkv
+    scale = 1.0 / math.sqrt(D)
+
+    qg = q.reshape(B, S, Hkv, group, D)
+
+    kernel = functools.partial(
+        _pp_kernel,
+        scale=scale, page=page, p_steps=pages_per_seq, group=group,
+        softcap=softcap,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,      # block_table, starts, lengths
+            grid=(B, Hkv, pages_per_seq),
+            in_specs=[
+                pl.BlockSpec(
+                    (1, S, 1, group, D),
+                    lambda b, h, pi, bt, st, ln: (b, 0, h, 0, 0),
+                ),
+                pl.BlockSpec(
+                    (1, page, 1, D),
+                    lambda b, h, pi, bt, st, ln: (bt[b, pi], 0, h, 0),
+                ),
+                pl.BlockSpec(
+                    (1, page, 1, D),
+                    lambda b, h, pi, bt, st, ln: (bt[b, pi], 0, h, 0),
+                ),
+            ],
+            out_specs=pl.BlockSpec(
+                (1, S, 1, group, D),
+                lambda b, h, pi, bt, st, ln: (b, 0, h, 0, 0),
+            ),
+            scratch_shapes=[
+                pltpu.VMEM((S * group, 1), jnp.float32),
+                pltpu.VMEM((S * group, 1), jnp.float32),
+                pltpu.VMEM((S * group, D), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, S, Hkv, group, D), q.dtype),
+        interpret=interpret,
+    )(
+        block_table.astype(jnp.int32), starts.astype(jnp.int32),
+        lengths.astype(jnp.int32), qg, k_pool, v_pool,
+    )
+    return out.reshape(B, S, H, D)
 
 
 # --------------------------------------------------------------------- #

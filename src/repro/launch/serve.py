@@ -5,10 +5,13 @@
 
 Continuous-batching mode drives the slot engine instead of a static
 batch; ``--cache-layout paged`` serves from the paged KV cache (block
-tables + Pallas paged attention / scatter writes):
+tables + Pallas paged attention / scatter writes), and ``--prefix-cache``
+/ ``--prefill-chunk N`` enable content-addressed prefix sharing and
+bounded chunked prefill on top of it:
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-7b --smoke \
-        --continuous --cache-layout paged --page-size 16 --requests 16
+        --continuous --cache-layout paged --page-size 16 --requests 16 \
+        --prefix-cache --prefill-chunk 32
 """
 from __future__ import annotations
 
@@ -58,15 +61,21 @@ def serve_continuous(model, params, sc: ServeConfig, *, gen: int,
     eng = Engine(
         model, params, slots=sc.batch_size, max_len=sc.max_seq_len,
         cache_layout=sc.cache_layout, page_size=sc.page_size,
+        prefix_cache=sc.prefix_cache, prefill_chunk=sc.prefill_chunk,
     )
     t0 = time.time()
+    # a shared task preamble on half the requests exercises the prefix
+    # cache the way protein/chemistry serving does (fixed scaffolds);
+    # at least one full page long, else no block can ever hash-hit
+    preamble = rng.integers(
+        5, cfg.vocab_size, size=max(sc.page_size, prompt_len // 2)
+    ).astype(np.int32)
     for i in range(requests):
         L = int(rng.integers(max(1, prompt_len // 2), prompt_len + 1))
-        eng.submit(Request(
-            uid=i,
-            prompt=rng.integers(5, cfg.vocab_size, size=L).astype(np.int32),
-            max_new=gen,
-        ))
+        prompt = rng.integers(5, cfg.vocab_size, size=L).astype(np.int32)
+        if sc.prefix_cache and i % 2 == 0:
+            prompt = np.concatenate([preamble, prompt])[: sc.max_seq_len - gen - 1]
+        eng.submit(Request(uid=i, prompt=prompt, max_new=gen))
     done = eng.run()
     wall = time.time() - t0
     toks = sum(len(r.output) for r in done)
@@ -74,10 +83,17 @@ def serve_continuous(model, params, sc: ServeConfig, *, gen: int,
     itl = np.mean([
         (r.t_done - r.t_first) / max(len(r.output) - 1, 1) for r in done
     ]) * 1e3
+    extra = ""
+    if eng.alloc is not None and sc.prefix_cache:
+        st = eng.alloc.stats
+        extra = (
+            f", prefix-cache: {st['hit_tokens']} tokens reused, "
+            f"{st['evictions']} evictions, {st['cow_copies']} COW copies"
+        )
     print(
         f"[{sc.cache_layout}] served {len(done)} requests / {toks} tokens "
         f"on {eng.B} slots: {toks / wall:.1f} tok/s, "
-        f"ttft {ttft:.1f}ms, itl {itl:.2f}ms"
+        f"ttft {ttft:.1f}ms, itl {itl:.2f}ms{extra}"
     )
 
 
@@ -95,16 +111,23 @@ def main() -> None:
                    default="dense")
     p.add_argument("--page-size", type=int, default=16)
     p.add_argument("--requests", type=int, default=16)
+    p.add_argument("--prefix-cache", action="store_true",
+                   help="content-addressed prefix sharing (paged layout)")
+    p.add_argument("--prefill-chunk", type=int, default=0,
+                   help="bound prefill to N-token chunks interleaved with "
+                        "decode steps (paged layout; 0 = one chunk)")
     a = p.parse_args()
 
     cfg = get_smoke_config(a.arch) if a.smoke else get_config(a.arch)
     model = build_model(cfg, ParallelConfig(), None)
     params = model.init(jax.random.PRNGKey(0))
     if a.continuous:
+        max_prompt = a.prompt_len * (2 if a.prefix_cache else 1)
         sc = ServeConfig(
-            max_seq_len=a.prompt_len + a.gen + cfg.num_frontend_tokens + 1,
+            max_seq_len=max_prompt + a.gen + cfg.num_frontend_tokens + 1,
             batch_size=a.batch, temperature=a.temperature,
             cache_layout=a.cache_layout, page_size=a.page_size,
+            prefix_cache=a.prefix_cache, prefill_chunk=a.prefill_chunk,
         )
         serve_continuous(model, params, sc, gen=a.gen,
                          prompt_len=a.prompt_len, requests=a.requests)

@@ -82,6 +82,7 @@ def attention_apply(
     cross_kv: Optional[jax.Array] = None,    # encoder output for cross-attn
     window: Optional[int] = None,
     block_table: Optional[jax.Array] = None,  # (B, pages_per_seq) paged layout
+    chunk_valid: Optional[jax.Array] = None,  # scalar: valid rows of a chunk
 ) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
     B, S, _ = x.shape
     causal = cfg.causal if causal is None else causal
@@ -113,6 +114,38 @@ def attention_apply(
                 positions = jnp.arange(S)
         q = rope(q, positions, cfg.rope_theta)
         k = rope(k, positions, cfg.rope_theta)
+
+    if mode == "chunk":
+        # chunked / suffix prefill over the paged layout (serving engine):
+        # the chunk's S rows sit at logical positions cache_pos + [0, S);
+        # rows >= chunk_valid are bucket padding (their K/V is routed to
+        # the null page and their outputs are discarded by the caller).
+        # Writes only ever touch pages the slot owns exclusively — the
+        # engine privatizes shared prefix pages (COW) before chunking.
+        assert cache is not None and "k_pool" in cache, \
+            "mode='chunk' requires the paged cache layout"
+        assert block_table is not None and jnp.ndim(cache_pos) == 0
+        assert B == 1, "chunked prefill processes one slot at a time"
+        page = cache["k_pool"].shape[1]
+        n_tables = block_table.shape[1]
+        pos = cache_pos + jnp.arange(S, dtype=jnp.int32)           # (S,)
+        valid = jnp.arange(S) < chunk_valid
+        page_idx = block_table[0, jnp.clip(pos // page, 0, n_tables - 1)]
+        page_idx = jnp.where(valid, page_idx, 0)                   # null page
+        k_pool, v_pool = ops.paged_kv_update_rows(
+            cache["k_pool"], cache["v_pool"], k[0], v[0],
+            page_idx, pos % page,
+        )
+        k_pool = ctx.cons(k_pool, None, None, "kv_tp", None)
+        v_pool = ctx.cons(v_pool, None, None, "kv_tp", None)
+        starts = jnp.full((B,), cache_pos, jnp.int32)
+        lengths = jnp.full((B,), cache_pos + chunk_valid, jnp.int32)
+        o = ops.paged_prefill_attention(
+            q, k_pool, v_pool, block_table, starts, lengths,
+            softcap=cfg.attn_logit_softcap, impl=cfg.kernel_impl,
+        )
+        new_cache = {"k_pool": k_pool, "v_pool": v_pool}
+        return _out_proj(cfg, ctx, params, o), new_cache
 
     if mode == "decode" and cache is not None and "k_pool" in cache:
         # paged layout (serving engine): per-slot positions, block-table

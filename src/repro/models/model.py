@@ -117,13 +117,14 @@ class Model:
 
     def _backbone(
         self, params, x, *, mode, positions=None, caches=None, cache_pos=None,
-        cross_kv=None, block_table=None,
+        cross_kv=None, block_table=None, chunk_valid=None,
     ):
         cfg = self.cfg
         x, new_caches, aux = T.decoder_stack(
             cfg, self.ctx, params["layers"], x,
             mode=mode, positions=positions, caches=caches,
             cache_pos=cache_pos, cross_kv=cross_kv, block_table=block_table,
+            chunk_valid=chunk_valid,
         )
         x = L.norm_apply(cfg, params["final_norm"], x)
         return x, new_caches, aux
@@ -216,6 +217,48 @@ class Model:
         lg = self.logits(params, last)
         cache = {"layers": caches, "pos": pos}
         return lg, cache
+
+    def prefill_chunk(self, params, layers, tokens: jax.Array,
+                      block_row: jax.Array, start, n_valid):
+        """One bounded chunk of an incremental prefill over the paged
+        engine cache (prefix caching + chunked prefill, serving engine).
+
+        ``layers`` is the engine cache's ``"layers"`` pytree (shared page
+        pools); ``tokens`` is a (1, C) chunk right-padded to a bucket;
+        ``block_row`` is (1, pages_per_seq) — the slot's row of the block
+        table; ``start`` (traced scalar) is the logical position of the
+        chunk's first token (> 0 when a cached prefix was skipped or an
+        earlier chunk already ran); ``n_valid`` (traced scalar, <= C) is
+        the number of real rows.  The chunk's K/V rows are scattered into
+        the slot's pages and attention runs causally over positions
+        [0, start + n_valid) through the block table — including pages
+        shared from the prefix cache.
+
+        Returns ``(logits, new_layers)`` where ``logits`` (1, 1, V) come
+        from the last valid row (only meaningful on the final chunk).
+
+        Only valid for causal attention-only stacks (the same condition
+        as prompt bucketing: SSM state and cross-attention cannot skip or
+        pad rows); the serving engine gates accordingly.
+        """
+        cfg = self.cfg
+        C = tokens.shape[1]
+        positions = jnp.asarray(start, jnp.int32) + jnp.arange(C, dtype=jnp.int32)
+        emb_pos = positions[None] if (not cfg.use_rope and cfg.max_pos) else None
+        x = L.embed_apply(
+            cfg, self.ctx, params["embed"], tokens,
+            positions=emb_pos, compute_dtype=self.policy.cdt,
+        )
+        x = self.ctx.cons(x, "batch", None, None)
+        x, new_layers, _ = self._backbone(
+            params, x, mode="chunk", positions=positions,
+            caches=layers, cache_pos=jnp.asarray(start, jnp.int32),
+            block_table=block_row, chunk_valid=jnp.asarray(n_valid, jnp.int32),
+        )
+        last = jax.lax.dynamic_slice_in_dim(
+            x, jnp.asarray(n_valid, jnp.int32) - 1, 1, axis=1
+        )
+        return self.logits(params, last), new_layers
 
     def decode_step(self, params, cache, tokens: jax.Array):
         """One-token step.  tokens: (B, 1).  ``cache["pos"]`` may be a

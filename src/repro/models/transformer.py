@@ -88,6 +88,7 @@ def _apply_sublayer(
     cross_kv,
     causal: Optional[bool] = None,
     block_table=None,
+    chunk_valid=None,
 ) -> Tuple[jax.Array, Any, jax.Array]:
     """Returns (x, new_cache, aux_loss)."""
     aux = jnp.zeros((), jnp.float32)
@@ -100,10 +101,16 @@ def _apply_sublayer(
             positions=positions, mode=mode,
             cache=cache.get("attn") if cache else None,
             cache_pos=cache_pos, causal=causal, block_table=block_table,
+            chunk_valid=chunk_valid,
         )
         if c is not None:
             new_cache["attn"] = c
     else:
+        if mode == "chunk":
+            raise ValueError(
+                "chunked prefill requires an attention-only stack (SSM "
+                "state cannot be advanced per-chunk with bucket padding)"
+            )
         mix, c = ssm_apply(
             cfg, ctx, params["ssm"], h, mode=mode,
             cache=cache.get("ssm") if cache else None,
@@ -182,6 +189,7 @@ def decoder_stack(
     cross_kv=None,
     causal: Optional[bool] = None,
     block_table=None,         # (B, pages_per_seq): paged decode (all layers)
+    chunk_valid=None,         # scalar: valid rows of a prefill chunk
 ) -> Tuple[jax.Array, Any, jax.Array]:
     """Runs the full layer stack.  Returns (x, new_caches, aux_loss_sum)."""
     u = unit_size(cfg)
@@ -197,12 +205,12 @@ def decoder_stack(
                 mode=mode, positions=positions,
                 cache=ucache.get(sub) if ucache else None,
                 cache_pos=cache_pos, cross_kv=cross_kv, causal=causal,
-                block_table=block_table,
+                block_table=block_table, chunk_valid=chunk_valid,
             )
             aux_sum = aux_sum + aux
             if nc:
                 new_ucache[sub] = nc
-        if ctx.context_parallel and mode != "decode":
+        if ctx.context_parallel and mode not in ("decode", "chunk"):
             x = ctx.cons(x, "batch", "seq_cp", None)
         else:
             x = ctx.cons(x, "batch", None, None)

@@ -28,6 +28,30 @@ Two cache layouts:
     The decode write is an O(B·page) Pallas scatter and attention reads
     K/V through the block table (``kernels/paged_attention.py``).
 
+Prefix caching + chunked prefill (paged layout only):
+
+``prefix_cache=True``
+    Admission hashes the prompt's full blocks against the allocator's
+    content-addressed page index.  Hash-hit blocks are *shared* — their
+    pages are mapped into the new slot (refcounted) and prefill skips
+    them entirely, running only over the suffix.  After a prompt
+    finishes prefilling, its full blocks are registered for future
+    sharing; a shared page is never written (copy-on-write privatizes
+    the final page when a fully-cached prompt recomputes its last token
+    for logits).
+
+``prefill_chunk=N``
+    Prompts prefill in bounded chunks of at most N tokens, one chunk per
+    engine step, interleaved with decode iterations — a long prompt can
+    no longer stall in-flight decodes for its whole length.  ``N=0``
+    with ``prefix_cache=True`` prefills the (possibly shortened) suffix
+    in one chunk.  Mid-prefill slots are invisible to the lockstep
+    decode: their block-table rows are masked to the null page in the
+    device copy, so concurrent decode writes touch no live data.
+
+Both features need right-paddable causal attention-only stacks (the same
+condition as prompt bucketing) and are rejected otherwise.
+
 Prompt bucketing: prompts are right-padded to power-of-2 buckets so the
 jitted prefill compiles once per bucket instead of once per unique prompt
 length.  Sound only for causal attention-only stacks (pad rows sit in the
@@ -48,6 +72,7 @@ from repro.models.model import Model
 from repro.serving.paged_cache import (
     NULL_PAGE,
     PageAllocator,
+    copy_pages,
     pages_for,
     write_slot_paged,
 )
@@ -66,11 +91,21 @@ class Request:
     t_done: float = 0.0
 
 
+@dataclasses.dataclass
+class _Prefill:
+    """A slot mid-way through an incremental (chunked/suffix) prefill."""
+
+    req: Request
+    prompt: np.ndarray           # original, unpadded prompt
+    done: int                    # tokens whose KV is already in the pages
+
+
 class Engine:
     def __init__(self, model: Model, params, *, slots: int, max_len: int,
                  extra_batch: Optional[Dict[str, Any]] = None,
                  cache_layout: str = "dense", page_size: int = 16,
-                 num_pages: int = 0, bucket_prompts: Optional[bool] = None):
+                 num_pages: int = 0, bucket_prompts: Optional[bool] = None,
+                 prefix_cache: bool = False, prefill_chunk: int = 0):
         self.model = model
         self.params = params
         self.B = slots
@@ -88,13 +123,36 @@ class Engine:
         )
         cross = cfg.num_frontend_tokens if cfg.is_encoder_decoder else 0
 
+        # right-padding (prompt buckets, chunk buckets, prefix skips) is
+        # only sound when pad rows stay in every real row's future: causal
+        # attention, no SSM state carry, no rolling (sliding-window) cache
+        has_ssm = any(not cfg.is_attn_layer(i) for i in range(cfg.num_layers))
+        paddable = cfg.causal and not has_ssm and not cfg.sliding_window
+
+        self.prefix_cache = prefix_cache
+        self.prefill_chunk = prefill_chunk
+        self._incremental = prefix_cache or prefill_chunk > 0
+        if self._incremental:
+            if cache_layout != "paged":
+                raise ValueError(
+                    "prefix_cache / prefill_chunk require cache_layout='paged'"
+                )
+            if not paddable or cfg.is_encoder_decoder or self.n_front:
+                raise ValueError(
+                    "prefix_cache / prefill_chunk require a causal "
+                    "attention-only decoder with no frontend rows"
+                )
+
         if cache_layout == "paged":
             # default pool: every slot can hold a full max_len sequence,
             # +1 for the reserved null page — admission then only queues
             # on slot pressure, like the dense layout.
             pages_per_seq = pages_for(max_len, page_size)
             num_pages = num_pages or 1 + slots * pages_per_seq
-            self.alloc = PageAllocator(num_pages, page_size, slots, max_len)
+            self.alloc = PageAllocator(
+                num_pages, page_size, slots, max_len,
+                prefix_cache=prefix_cache,
+            )
             cache = model.init_cache(
                 slots, max_len, cross_len=cross,
                 layout="paged", page_size=page_size, num_pages=num_pages,
@@ -111,27 +169,37 @@ class Engine:
         self.slot_left: np.ndarray = np.zeros((slots,), np.int32)
         self.queue: List[Request] = []
         self.done: List[Request] = []
+        # slots mid-prefill, in admission order (FIFO chunk scheduling)
+        self._prefilling: List[int] = []
+        self._prefill_state: Dict[int, _Prefill] = {}
 
         if bucket_prompts is None:
-            # right-padding is only sound when pad rows stay in every real
-            # row's future: causal attention, no SSM state carry, and no
-            # rolling (sliding-window) cache placement
-            has_ssm = any(
-                not cfg.is_attn_layer(i) for i in range(cfg.num_layers)
-            )
-            bucket_prompts = (
-                cfg.causal and not has_ssm and not cfg.sliding_window
-            )
+            bucket_prompts = paddable
         self.bucket_prompts = bucket_prompts
 
         self._prefill = jax.jit(
             lambda p, b, L: model.prefill(p, b, max_len, length=L)
         )
-        self._decode = jax.jit(model.decode_step)
-        self._insert_paged = jax.jit(write_slot_paged)
+        # the engine cache is serving steady state: donate it so XLA
+        # updates pools/buffers in place instead of copying the whole
+        # cache every decode step / prefill chunk / page insert (each
+        # call consumes self.cache[...] and the engine reassigns it)
+        self._decode = jax.jit(model.decode_step, donate_argnums=(1,))
+        self._insert_paged = jax.jit(write_slot_paged, donate_argnums=(0,))
+        self._chunk = jax.jit(model.prefill_chunk, donate_argnums=(1,))
+        self._copy = jax.jit(copy_pages, donate_argnums=(0,))
 
     # -------------------------------------------------------------- admin
     def submit(self, req: Request) -> None:
+        if req.max_new < 1:
+            raise ValueError(
+                f"request {req.uid}: max_new must be >= 1 (got {req.max_new})"
+            )
+        if len(req.prompt) == 0 and self.n_front == 0:
+            raise ValueError(
+                f"request {req.uid}: empty prompt — a causal LM has no "
+                f"token to condition the first logits on"
+            )
         need = len(req.prompt) + self.n_front + req.max_new
         if need > self.max_len:
             raise ValueError(
@@ -148,15 +216,29 @@ class Engine:
         self.queue.append(req)
 
     def _bucket(self, n: int) -> int:
-        """Pad prompt length to a power-of-2 bucket (min 8, capped at the
-        longest prompt max_len admits) so prefill stops recompiling per
-        unique length."""
+        """Pad a prompt/chunk length to a power-of-2 bucket (min 8, capped
+        at the longest prompt max_len admits) so prefill stops recompiling
+        per unique length.  Never returns less than `n`: at the cap
+        boundary (prompt exactly at max_len) the old min() could hand back
+        a bucket SMALLER than the prompt and silently truncate it."""
         if not self.bucket_prompts:
             return n
+        cap = max(self.max_len - self.n_front, 1)
         b = 8
         while b < n:
             b *= 2
-        return min(b, self.max_len - self.n_front)
+        return max(n, min(b, cap))
+
+    def _push_table(self) -> None:
+        """Push the block table to the device cache, masking mid-prefill
+        slots to the null page: the lockstep decode must neither read nor
+        write their half-built pages (their writes land on page 0, which
+        belongs to no sequence)."""
+        tbl = self.alloc.table
+        if self._prefilling:
+            tbl = tbl.copy()
+            tbl[self._prefilling, :] = NULL_PAGE
+        self.cache["block_table"] = jnp.asarray(tbl)
 
     def _write_slot(self, slot: int, one_cache, pos: int) -> None:
         """Insert a batch-1 prefilled cache into slot `slot` (dense)."""
@@ -183,7 +265,7 @@ class Engine:
             self.cache["layers"], one_cache["layers"], slot,
             jnp.asarray(ids),
         )
-        self.cache["block_table"] = jnp.asarray(self.alloc.table)
+        self._push_table()
         self.cache["pos"] = self.cache["pos"].at[slot].set(pos)
 
     def _admit(self) -> None:
@@ -193,6 +275,29 @@ class Engine:
             req = self.queue[0]
             L = len(req.prompt)
             need = L + self.n_front + req.max_new
+            if self._incremental:
+                plan = self.alloc.plan(need, req.prompt)
+                if not self.alloc.can_admit(need, plan):
+                    break  # head-of-line blocking keeps FIFO order
+                self.queue.pop(0)
+                self.alloc.alloc(slot, need, plan)
+                if self.alloc.last_cow is not None:
+                    # the final page of a fully-cached prompt is shared:
+                    # privatize it (copy-on-write) before the last-token
+                    # recompute writes into it
+                    src, dst = self.alloc.last_cow
+                    self.cache["layers"] = self._copy(
+                        self.cache["layers"],
+                        jnp.asarray([src], jnp.int32),
+                        jnp.asarray([dst], jnp.int32),
+                    )
+                self.slot_req[slot] = req
+                self._prefill_state[slot] = _Prefill(
+                    req=req, prompt=req.prompt, done=plan.cached_tokens
+                )
+                self._prefilling.append(slot)
+                self._push_table()
+                continue
             if self.alloc is not None and not self.alloc.can_admit(need):
                 # head-of-line blocking keeps FIFO order: wait for pages
                 break
@@ -223,6 +328,43 @@ class Engine:
             if nxt == req.eos_id or req.max_new <= 1:
                 self._finish(slot)
 
+    # ----------------------------------------------------- chunked prefill
+    def _advance_prefill(self, slot: int) -> None:
+        """Run ONE bounded prefill chunk for mid-prefill slot `slot`; on
+        prompt completion emit the first token and flip the slot to
+        decoding."""
+        st = self._prefill_state[slot]
+        L = len(st.prompt)
+        remaining = L - st.done
+        c = min(self.prefill_chunk or remaining, remaining)
+        Cbuf = self._bucket(c)
+        toks = np.zeros((1, Cbuf), np.int32)
+        toks[0, :c] = st.prompt[st.done : st.done + c]
+        logits, self.cache["layers"] = self._chunk(
+            self.params, self.cache["layers"], jnp.asarray(toks),
+            jnp.asarray(self.alloc.table[slot : slot + 1]),
+            jnp.int32(st.done), jnp.int32(c),
+        )
+        st.done += c
+        if st.done < L:
+            return
+        # prompt complete: register its full blocks for future sharing,
+        # make the slot's pages visible to the lockstep decode, emit the
+        # first generated token
+        req = st.req
+        self.alloc.register(slot, st.prompt)
+        self._prefilling.remove(slot)
+        del self._prefill_state[slot]
+        self._push_table()
+        self.cache["pos"] = self.cache["pos"].at[slot].set(L)
+        nxt = int(jnp.argmax(logits[0, -1]))
+        req.output = [nxt]
+        req.t_first = time.time()
+        self.slot_last[slot] = nxt
+        self.slot_left[slot] = req.max_new - 1
+        if nxt == req.eos_id or req.max_new <= 1:
+            self._finish(slot)
+
     def _finish(self, slot: int) -> None:
         req = self.slot_req[slot]
         req.t_done = time.time()
@@ -231,34 +373,54 @@ class Engine:
         self.slot_left[slot] = 0
         if self.alloc is not None:
             self.alloc.release(slot)
-            self.cache["block_table"] = jnp.asarray(self.alloc.table)
+            self._push_table()
 
     # --------------------------------------------------------------- step
     def step(self) -> int:
-        """Admit + one decode iteration over all active slots.
-        Returns the number of active slots decoded."""
+        """Admit + bounded prefill chunks + one decode iteration over all
+        decoding slots.  Returns the number of slots decoded.
+
+        With in-flight decodes, only the longest-waiting mid-prefill slot
+        advances — by ONE chunk — per step, so a long prompt delays each
+        decode iteration by at most `prefill_chunk` tokens of compute.
+        With no decodes to protect, every mid-prefill slot advances a
+        chunk (there is nothing to stall, and admission ramps faster)."""
         self._admit()
-        active = [s for s in range(self.B) if self.slot_req[s] is not None]
-        if not active:
-            return 0
-        tokens = jnp.asarray(self.slot_last[:, None], jnp.int32)
-        logits, self.cache = self._decode(self.params, self.cache, tokens)
-        nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1), np.int32)
-        for s in active:
-            req = self.slot_req[s]
-            req.output.append(int(nxt[s]))
-            self.slot_last[s] = nxt[s]
-            self.slot_left[s] -= 1
-            if int(nxt[s]) == req.eos_id or self.slot_left[s] <= 0:
-                self._finish(s)
-        # inactive slots also stepped (lockstep hardware batch): their
-        # positions advanced harmlessly — reset them to 0 so a stale slot
-        # is re-admitted with clean pos semantics (paged: their writes all
-        # land on the null page)
-        inactive = [s for s in range(self.B) if self.slot_req[s] is None]
-        if inactive:
+        if self._prefilling:
+            decoding = any(
+                self.slot_req[s] is not None and s not in self._prefill_state
+                for s in range(self.B)
+            )
+            for slot in (self._prefilling[:1] if decoding
+                         else list(self._prefilling)):
+                self._advance_prefill(slot)
+        active = [
+            s for s in range(self.B)
+            if self.slot_req[s] is not None and s not in self._prefill_state
+        ]
+        if active:
+            tokens = jnp.asarray(self.slot_last[:, None], jnp.int32)
+            logits, self.cache = self._decode(self.params, self.cache, tokens)
+            nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1), np.int32)
+            for s in active:
+                req = self.slot_req[s]
+                req.output.append(int(nxt[s]))
+                self.slot_last[s] = nxt[s]
+                self.slot_left[s] -= 1
+                if int(nxt[s]) == req.eos_id or self.slot_left[s] <= 0:
+                    self._finish(s)
+        # slots without a decoding request also stepped (lockstep hardware
+        # batch): their positions advanced harmlessly — reset them to 0 so
+        # a stale slot is re-admitted with clean pos semantics (paged:
+        # their writes all land on the null page; mid-prefill slots are
+        # masked out of the device block table entirely)
+        idle = [
+            s for s in range(self.B)
+            if self.slot_req[s] is None or s in self._prefill_state
+        ]
+        if idle and active:
             pos = np.array(self.cache["pos"])  # copy (device arrays are RO)
-            pos[inactive] = 0
+            pos[idle] = 0
             self.cache["pos"] = jnp.asarray(pos)
         return len(active)
 

@@ -1,0 +1,15 @@
+"""Shared test configuration.
+
+Registers the "ci" Hypothesis profile at collection time so
+``pytest --hypothesis-profile=ci`` (the CI serving/property job) can
+select it: derandomized (fixed seed) for reproducible runs, no deadline
+(CI boxes are noisy).  Individual property tests may override
+``max_examples`` with their own ``@settings``.
+"""
+try:
+    from hypothesis import settings
+
+    settings.register_profile("ci", max_examples=20, deadline=None,
+                              derandomize=True)
+except ImportError:  # hypothesis is optional outside the CI serving job
+    pass

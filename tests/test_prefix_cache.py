@@ -1,0 +1,397 @@
+"""Prefix caching + chunked prefill: allocator property churn and
+engine/model parity.
+
+The property suite drives random admit/decode/release/evict/COW churn
+with shared prompt prefixes against :class:`PageAllocator` plus a shadow
+content model (what the KV pages *would* hold), checking after every op:
+
+  * refcounts equal live references (and the rest of
+    ``check_invariants``: no page both free and mapped, hash index never
+    points at a freed page, no leaks);
+  * a hash hit always returns pages whose recorded content matches the
+    prompt's blocks (content addressing is sound);
+  * COW never mutates a shared page — any write target is exclusively
+    owned, and the source page's content survives a copy-on-write.
+
+Runs under Hypothesis when available (``@settings(derandomize=True)``
+keeps CI deterministic); a seeded fallback driver runs the same churn
+with 250 fixed examples where Hypothesis is not installed, so the
+invariants are enforced in every environment.
+
+Parity: greedy engine outputs with prefix caching ON are token-for-token
+identical to cold-start prefill (dense engine and paged baseline),
+across ``impl`` xla / pallas_interpret; chunked prefill logits match
+one-shot prefill for chunk = 16 / 64 / max.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.config import ModelConfig
+from repro.models.model import build_model
+from repro.serving.engine import Engine, Request
+from repro.serving.paged_cache import (
+    PageAllocator,
+    block_hashes,
+    pages_for,
+)
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAS_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - CI installs hypothesis
+    HAS_HYPOTHESIS = False
+
+PAGE = 4
+
+
+# --------------------------------------------------------------------- #
+# allocator churn with a shadow content model
+# --------------------------------------------------------------------- #
+class Churn:
+    """Drives one op stream; mirrors the engine's write discipline."""
+
+    N_LINEAGES = 3
+
+    def __init__(self, num_pages=21, slots=4, max_len=24):
+        self.al = PageAllocator(num_pages, PAGE, slots, max_len,
+                                prefix_cache=True)
+        # each lineage is a long base sequence; prompts take a prefix of
+        # a lineage plus a unique tail — natural shared-prefix traffic
+        rng = np.random.default_rng(12345)
+        self.lineages = [
+            rng.integers(0, 7, size=max_len).astype(np.int32)
+            for _ in range(self.N_LINEAGES)
+        ]
+        self.uniq = 1000
+        self.active = {}   # slot -> prompt np.ndarray
+        self.content = {}  # page -> tuple(block tokens) once "prefilled"
+
+    # -- helpers ------------------------------------------------------- #
+    def _write(self, page: int, block) -> None:
+        """Simulate writing KV into `page` — legal only if the slot owns
+        it exclusively and it is not shared through the hash index with
+        anyone else (the COW discipline)."""
+        assert self.al.ref(page) == 1, \
+            f"write into shared page {page} (ref={self.al.ref(page)})"
+        self.content[page] = tuple(int(t) for t in block)
+
+    def _check_match(self, prompt, shared) -> None:
+        for i, p in enumerate(shared):
+            blk = tuple(int(t) for t in prompt[i * PAGE : (i + 1) * PAGE])
+            assert self.content.get(p) == blk, \
+                f"hash hit returned page {p} with wrong content"
+
+    # -- ops ----------------------------------------------------------- #
+    def admit(self, slot, lineage, pfx_blocks, tail_len, max_new) -> None:
+        if slot in self.active:
+            return
+        base = self.lineages[lineage % self.N_LINEAGES]
+        pfx = base[: (pfx_blocks % (len(base) // PAGE)) * PAGE]
+        self.uniq += 1
+        tail = np.full((tail_len % (2 * PAGE),), self.uniq, np.int32)
+        prompt = np.concatenate([pfx, tail]).astype(np.int32)
+        if len(prompt) == 0:
+            return
+        budget = len(prompt) + 1 + max_new % 8
+        if not self.al.fits_slot(budget):
+            return
+        plan = self.al.plan(budget, prompt)
+        self._check_match(prompt[: plan.cached_tokens + 1], plan.shared[
+            : plan.cached_tokens // PAGE
+        ])
+        if not self.al.can_admit(budget, plan):
+            return
+        pages = self.al.alloc(slot, budget, plan)
+        # simulate the suffix prefill: COW copy first, then fresh blocks
+        if self.al.last_cow is not None:
+            src, dst = self.al.last_cow
+            assert self.al.ref(dst) == 1
+            self.content[dst] = self.content.get(src)  # device page copy
+            # the source stays intact for its other holders / the index
+            assert self.al.is_registered(src) or self.al.ref(src) > 0
+        n_shared = plan.cached_tokens // PAGE
+        for i in range(n_shared, len(prompt) // PAGE):
+            self._write(int(pages[i]), prompt[i * PAGE : (i + 1) * PAGE])
+        self.al.register(slot, prompt)
+        self.active[slot] = prompt
+
+    def decode(self, slot) -> None:
+        """One generated token: lazy growth, never into a shared page."""
+        if slot not in self.active:
+            return
+        tokens = self.al._tokens[slot]
+        need = pages_for(tokens + 1, PAGE)
+        if need > self.al.pages_per_seq or \
+                need - len(self.al.owned(slot)) > self.al.free_pages:
+            return
+        self.al.append(slot)
+        # the decode write position must sit in an exclusively-owned page
+        page = self.al.owned(slot)[tokens // PAGE]
+        assert self.al.ref(page) >= 1
+        if self.al.ref(page) > 1 or self.al.is_registered(page):
+            # engine guarantee: decode never writes shared/registered
+            # pages because registration covers only full PROMPT blocks
+            # and decode writes at pos >= len(prompt)
+            prompt = self.active[slot]
+            assert tokens // PAGE < len(prompt) // PAGE, \
+                "decode write position landed in a shared/registered page"
+
+    def cow(self, slot, idx) -> None:
+        """Explicit copy-on-write of an owned page (the fork path)."""
+        if slot not in self.active or not self.al.owned(slot):
+            return
+        idx = idx % len(self.al.owned(slot))
+        src = self.al.owned(slot)[idx]
+        if self.al.ref(src) > 1 and not self.al._free and \
+                not self.al._evictable:
+            return  # no page to copy into
+        src_content = self.content.get(src)
+        src_ref = self.al.ref(src)
+        pair = self.al.cow_write(slot, idx)
+        if src_ref > 1:
+            assert pair is not None and pair[0] == src
+            dst = pair[1]
+            assert self.al.ref(src) == src_ref - 1
+            assert self.al.ref(dst) == 1 and self.al.owned(slot)[idx] == dst
+            self.content[dst] = src_content
+            # COW never mutates the shared source page
+            assert self.content.get(src) == src_content
+        else:
+            assert pair is None
+            assert not self.al.is_registered(src)  # unregistered in place
+
+    def release(self, slot) -> None:
+        if slot in self.active:
+            self.al.release(slot)
+            del self.active[slot]
+
+    def flush(self) -> None:
+        self.al.drop_cache()
+
+    def apply(self, op) -> None:
+        kind = op[0] % 8
+        if kind <= 2:
+            self.admit(op[1] % self.al.slots, op[2], op[3], op[4], op[1])
+        elif kind <= 4:
+            self.decode(op[1] % self.al.slots)
+        elif kind == 5:
+            self.cow(op[1] % self.al.slots, op[2])
+        elif kind == 6:
+            self.release(op[1] % self.al.slots)
+        else:
+            self.flush()
+        self.al.check_invariants()
+
+    def finish(self) -> None:
+        for slot in list(self.active):
+            self.release(slot)
+        self.al.check_invariants()
+        # every page is either free or a parked cached page; nothing leaks
+        assert self.al.free_pages == self.al.num_pages - 1
+
+
+def _run_ops(ops) -> None:
+    churn = Churn()
+    for op in ops:
+        churn.apply(op)
+    churn.finish()
+
+
+_OP = (0, 8), (0, 64), (0, 12), (0, 64), (0, 64)
+
+
+if HAS_HYPOTHESIS:
+    op_strategy = st.tuples(*[st.integers(lo, hi) for lo, hi in _OP])
+
+    @settings(max_examples=250, deadline=None, derandomize=True)
+    @given(ops=st.lists(op_strategy, min_size=1, max_size=40))
+    def test_prefix_allocator_churn_hypothesis(ops):
+        _run_ops(ops)
+
+
+def test_prefix_allocator_churn_seeded():
+    """Seeded fallback: the same churn over 250 deterministic examples —
+    keeps the invariants enforced where hypothesis is not installed."""
+    rng = np.random.default_rng(0)
+    for _ in range(250):
+        n = int(rng.integers(1, 41))
+        ops = [tuple(int(rng.integers(lo, hi + 1)) for lo, hi in _OP)
+               for _ in range(n)]
+        _run_ops(ops)
+
+
+def test_cow_write_shared_page_semantics():
+    """Directed COW: two slots share a page; a COW gives the writer a
+    private copy and leaves the shared page untouched and still indexed."""
+    al = PageAllocator(17, PAGE, 2, 16, prefix_cache=True)
+    prompt = np.arange(8, dtype=np.int32)          # 2 full blocks
+    al.alloc(0, 10, al.plan(10, prompt))
+    al.register(0, prompt)
+    plan = al.plan(10, prompt)
+    assert plan.cached_tokens == 8 - 1 and plan.cow_last  # full-prompt hit
+    plan2 = al.plan(12, np.concatenate([prompt, [9, 9, 9]]).astype(np.int32))
+    assert plan2.cached_tokens == 8 and not plan2.cow_last
+    al.alloc(1, 12, plan2)
+    shared = al.owned(0)[0]
+    assert al.owned(1)[0] == shared and al.ref(shared) == 2
+    pair = al.cow_write(1, 0)
+    assert pair is not None and pair[0] == shared
+    assert al.ref(shared) == 1 and al.ref(pair[1]) == 1
+    assert al.is_registered(shared) and not al.is_registered(pair[1])
+    al.check_invariants()
+    al.release(0), al.release(1)
+    al.check_invariants()
+
+
+def test_eviction_never_dangles_hash_index():
+    """Evicting parked pages under pressure drops their index entries —
+    the hash index never points at a freed page (checked structurally)."""
+    al = PageAllocator(6, PAGE, 2, 32, prefix_cache=True)   # 5 usable pages
+    pa = np.arange(8, dtype=np.int32)
+    al.alloc(0, 8, al.plan(8, pa))
+    al.register(0, pa)
+    al.release(0)                       # both pages parked, still indexed
+    assert len(al._evictable) == 2 and al.free_pages == 5
+    pb = np.full((16,), 7, np.int32)    # needs 4+ pages -> forces eviction
+    al.alloc(0, 17, al.plan(17, pb))
+    assert al.stats["evictions"] >= 1
+    al.check_invariants()
+    assert al.match_prefix(pa) == [] or len(al.match_prefix(pa)) < 2
+    al.release(0)
+    al.check_invariants()
+
+
+# --------------------------------------------------------------------- #
+# parity: prefix caching / chunked prefill never change a token
+# --------------------------------------------------------------------- #
+def _build(kernel_impl="auto"):
+    cfg = ModelConfig(
+        name="t", family="dense", num_layers=2, d_model=64, num_heads=4,
+        num_kv_heads=2, d_ff=128, vocab_size=64, dtype="float32",
+        kernel_impl=kernel_impl,
+    )
+    model = build_model(cfg)
+    return model, model.init(jax.random.PRNGKey(0))
+
+
+def _serve(model, params, prompts, layout, max_new=4, **kw):
+    eng = Engine(model, params, slots=2, max_len=64, cache_layout=layout,
+                 page_size=8, **kw)
+    for i, p in enumerate(prompts):
+        eng.submit(Request(uid=i, prompt=p, max_new=max_new))
+    done = eng.run()
+    assert len(done) == len(prompts)
+    return eng, {r.uid: r.output for r in done}
+
+
+def _shared_prefix_prompts(rng, n_pfx=16, tails=(5, 9, 0, 3)):
+    pfx = rng.integers(0, 64, size=n_pfx).astype(np.int32)
+    return [
+        np.concatenate([pfx, rng.integers(0, 64, size=t).astype(np.int32)])
+        for t in tails
+    ]
+
+
+@pytest.mark.parametrize("impl", ["xla", "pallas_interpret"])
+def test_engine_prefix_cache_matches_cold_start(impl):
+    """Greedy outputs with prefix caching ON (incl. a prompt exactly equal
+    to the cached prefix — the COW path) match cold-start prefill in both
+    the dense and the paged baseline engines."""
+    model, params = _build(impl)
+    rng = np.random.default_rng(11)
+    prompts = _shared_prefix_prompts(rng)
+    _, dense = _serve(model, params, prompts, "dense")
+    _, paged = _serve(model, params, prompts, "paged")
+    eng, pfx = _serve(model, params, prompts, "paged", prefix_cache=True)
+    assert pfx == dense and paged == dense
+    assert eng.alloc.stats["hit_tokens"] > 0, "prefix cache never hit"
+    assert eng.alloc.stats["cow_copies"] >= 1, "exact-prefix COW not hit"
+    eng.alloc.check_invariants()
+
+
+def test_engine_chunked_prefill_matches_cold_start():
+    """Bounded prefill chunks interleaved with decodes are invisible in
+    the output stream, with and without prefix caching."""
+    model, params = _build()
+    rng = np.random.default_rng(12)
+    prompts = _shared_prefix_prompts(rng, n_pfx=24, tails=(13, 1, 7, 0, 20))
+    _, dense = _serve(model, params, prompts, "dense")
+    for kw in (dict(prefill_chunk=8), dict(prefill_chunk=8, prefix_cache=True)):
+        eng, out = _serve(model, params, prompts, "paged", **kw)
+        assert out == dense, kw
+        eng.alloc.check_invariants()
+        assert eng.alloc.free_pages == eng.alloc.num_pages - 1
+
+
+def test_engine_prefix_cache_under_eviction_pressure():
+    """A pool too small to keep cached pages parked forces evictions;
+    outputs still match the dense engine exactly."""
+    model, params = _build()
+    rng = np.random.default_rng(13)
+    prompts = _shared_prefix_prompts(rng, tails=(2, 3))
+    prompts += [rng.integers(0, 64, size=20).astype(np.int32)
+                for _ in range(3)]
+    _, dense = _serve(model, params, prompts, "dense")
+    eng, out = _serve(model, params, prompts, "paged", num_pages=8,
+                      prefix_cache=True, prefill_chunk=8)
+    assert out == dense
+    assert eng.alloc.stats["evictions"] > 0
+    eng.alloc.check_invariants()
+
+
+@pytest.mark.parametrize("impl", ["xla", "pallas_interpret"])
+@pytest.mark.parametrize("chunk", [16, 64, 0])
+def test_chunked_prefill_matches_one_shot_logits(impl, chunk):
+    """Model-level: running prefill in chunks of 16 / 64 / max over the
+    paged cache reproduces the one-shot prefill logits."""
+    model, params = _build(impl)
+    rng = np.random.default_rng(14)
+    L, page, max_len = 37, 8, 64
+    prompt = rng.integers(0, 64, size=L).astype(np.int32)
+    lg_ref, _ = model.prefill(
+        params, {"tokens": jnp.asarray(prompt[None], jnp.int32)}, max_len
+    )
+    al = PageAllocator(1 + 2 * (max_len // page), page, 2, max_len)
+    cache = model.init_cache(2, max_len, layout="paged", page_size=page,
+                             num_pages=al.num_pages)
+    al.alloc(0, L + 4)
+    layers = cache["layers"]
+    start, lg = 0, None
+    step = chunk or L
+    while start < L:
+        c = min(step, L - start)
+        toks = np.zeros((1, step), np.int32)
+        toks[0, :c] = prompt[start : start + c]
+        lg, layers = model.prefill_chunk(
+            params, layers, jnp.asarray(toks), jnp.asarray(al.table[0:1]),
+            jnp.int32(start), jnp.int32(c),
+        )
+        start += c
+    np.testing.assert_allclose(
+        np.asarray(lg)[0, -1], np.asarray(lg_ref)[0, -1], atol=2e-4, rtol=2e-4
+    )
+
+
+def test_incremental_prefill_rejected_off_paged():
+    model, params = _build()
+    with pytest.raises(ValueError):
+        Engine(model, params, slots=1, max_len=32, cache_layout="dense",
+               prefix_cache=True)
+    with pytest.raises(ValueError):
+        Engine(model, params, slots=1, max_len=32, cache_layout="dense",
+               prefill_chunk=8)
+
+
+def test_block_hashes_are_chained():
+    """Identical block content at different depths must hash differently
+    (the index key covers the whole prefix, not just the block)."""
+    a = np.asarray([1, 2, 3, 4, 1, 2, 3, 4], np.int32)
+    h = block_hashes(a, 4)
+    assert len(h) == 2 and h[0] != h[1]
+    b = np.asarray([9, 9, 9, 9, 1, 2, 3, 4], np.int32)
+    hb = block_hashes(b, 4)
+    assert hb[1] != h[1]  # same block, different prefix
+    assert block_hashes(a[:7], 4) == h[:1]  # partial tail never hashed

@@ -23,9 +23,9 @@ def build(family="dense"):
     return model, params
 
 
-def isolated_greedy(model, params, prompt, n):
+def isolated_greedy(model, params, prompt, n, max_len=64):
     logits, cache = model.prefill(
-        params, {"tokens": jnp.asarray(prompt[None], jnp.int32)}, 64
+        params, {"tokens": jnp.asarray(prompt[None], jnp.int32)}, max_len
     )
     out = [int(jnp.argmax(logits[0, -1]))]
     for _ in range(n - 1):
@@ -65,6 +65,51 @@ def test_engine_ssm_family():
     for req in done:
         want = isolated_greedy(model, params, prompts[req.uid], 4)
         assert req.output == want, (req.uid, req.output, want)
+
+
+@pytest.mark.parametrize("layout", ["dense", "paged"])
+def test_engine_rejects_empty_prompt_and_zero_budget(layout):
+    """Regression (_bucket edge cases): an empty prompt used to be padded
+    to an 8-token bucket and the last-logits slice clamped to a wrong row
+    (under-allocation of valid tokens); max_new=0 used to emit one token
+    anyway.  Both are now rejected at submit."""
+    model, params = build()
+    eng = Engine(model, params, slots=1, max_len=64, cache_layout=layout,
+                 page_size=8)
+    with pytest.raises(ValueError, match="empty prompt"):
+        eng.submit(Request(uid=0, prompt=np.zeros((0,), np.int32), max_new=4))
+    with pytest.raises(ValueError, match="max_new"):
+        eng.submit(Request(uid=1, prompt=np.ones(4, np.int32), max_new=0))
+    assert not eng.queue
+
+
+@pytest.mark.parametrize("layout", ["dense", "paged"])
+def test_engine_bucket_exact_max_len(layout):
+    """Regression (_bucket edge cases): a prompt at the admission boundary
+    (prompt + max_new == max_len, with max_len not a power of two) must
+    bucket to a size that neither truncates the prompt nor overflows the
+    cache, and produce the same tokens as unbucketed serving."""
+    model, params = build()
+    max_len = 48                                  # not a power of two
+    rng = np.random.default_rng(3)
+    prompt = rng.integers(0, 64, size=max_len - 4).astype(np.int32)
+    outs = {}
+    for bucket in (True, False):
+        eng = Engine(model, params, slots=1, max_len=max_len,
+                     cache_layout=layout, page_size=8, bucket_prompts=bucket)
+        if bucket:
+            # the pow-2 bucket (64) must clamp to max_len, never below
+            # the prompt length
+            assert eng._bucket(len(prompt)) == max_len
+            assert eng._bucket(max_len) == max_len
+            assert eng._bucket(3) == 8
+        eng.submit(Request(uid=0, prompt=prompt, max_new=4))
+        done = eng.run()
+        assert len(done) == 1 and len(done[0].output) == 4
+        outs[bucket] = done[0].output
+    assert outs[True] == outs[False]
+    want = isolated_greedy(model, params, prompt, 4, max_len=max_len)
+    assert outs[True] == want
 
 
 def test_engine_eos_early_stop():
