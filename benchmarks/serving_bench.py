@@ -1,7 +1,8 @@
-"""Serving-path benchmark: dense-slot vs paged KV-cache engine, and
-prefix caching + chunked prefill vs the cold paged baseline.
+"""Serving-path benchmark: dense-slot vs paged KV-cache engine, prefix
+caching + chunked prefill vs the cold paged baseline, and sampled decode
+(Generation API v2 fused on-device sampler) vs greedy.
 
-Three measurements:
+Four measurements:
 
   * engine comparison — the continuous-batching engine end-to-end on a
     smoke model under both cache layouts, reporting tokens/s,
@@ -17,6 +18,11 @@ Three measurements:
     Token parity is asserted, and the prefix-cached TTFT must be at
     least 2x better: hash-hit blocks skip prefill entirely, so only the
     unique tail is computed.
+  * sampled-decode workload — the same engine/prompts with per-request
+    SamplingParams (temperature/top-k/top-p, fixed seeds).  Token
+    selection runs fused inside the jitted decode step, so sampled
+    throughput is ASSERTED within 10% of greedy; the identical-pass
+    output check doubles as a sampled-determinism assertion.
   * decode cache-write microbenchmark at a long-cache config — the dense
     layout's O(B·T) one-hot masked select vs the paged O(B·page)
     scatter (``ops.paged_kv_update``).  The paged write must win; this
@@ -36,14 +42,18 @@ import jax.numpy as jnp
 import numpy as np
 
 
-def _run_pass(eng, prompts, max_new):
-    """Submit `prompts` to `eng` and run this batch to completion."""
+def _run_pass(eng, prompts, max_new, make_params=None):
+    """Submit `prompts` to `eng` and run this batch to completion.
+
+    ``make_params(i)`` supplies a per-request ``SamplingParams`` (the
+    sampled-decode workload); ``None`` keeps legacy greedy requests."""
     from repro.serving.engine import Request
 
     n_before = len(eng.done)
     t0 = time.time()
     for i, p in enumerate(prompts):
-        eng.submit(Request(uid=i, prompt=p, max_new=max_new))
+        sp = make_params(i) if make_params is not None else None
+        eng.submit(Request(uid=i, prompt=p, max_new=max_new, params=sp))
     eng.run()
     wall = time.time() - t0
     done = eng.done[n_before:]
@@ -124,6 +134,49 @@ def run(report):
         )
     assert stats["paged"] == stats["dense"], \
         "paged engine diverged from dense-slot engine (greedy parity)"
+
+    # ------------------------------------- sampled-decode workload
+    # Generation API v2: per-request temperature/top-k/top-p through the
+    # fused on-device sampler.  Selection runs inside the same jitted
+    # decode step as greedy (the filter is a few VMEM sweeps over the
+    # (B, V) logit panel vs the model's matmuls), so sampled throughput
+    # must stay within 10% of greedy on the identical workload.  Greedy
+    # and sampled passes run INTERLEAVED on one engine (same compiled
+    # step, best-of-3 each) so machine drift between phases cannot fake
+    # a regression; fixed per-request seeds make the sampled passes
+    # deterministic, asserted across repeats.
+    from repro.serving.engine import Engine
+    from repro.serving.sampling import SamplingParams
+
+    def mk(i):
+        return SamplingParams(temperature=0.8, top_k=40, top_p=0.9,
+                              seed=1000 + i, max_new=16)
+
+    eng = Engine(model, params, slots=4, max_len=128, cache_layout="paged",
+                 page_size=16)
+    _run_pass(eng, prompts, 16)             # warm greedy shapes
+    _run_pass(eng, prompts, 16, mk)         # warm sampled shapes
+    # best-of-3 per variant, interleaved: a single noisy pass on a loaded
+    # CI box must not be able to fake a >10% regression
+    gs, ss = [], []
+    for _ in range(3):
+        gs.append(_run_pass(eng, prompts, 16))
+        ss.append(_run_pass(eng, prompts, 16, mk))
+    assert all(s[0] == ss[0][0] for s in ss), \
+        "fixed-seed sampled pass not deterministic"
+    assert gs[0][0] == stats["paged"], "greedy output drifted between engines"
+    tps_g = max(g[1] for g in gs)
+    tps_s = max(s[1] for s in ss)
+    ratio = tps_s / max(tps_g, 1e-9)
+    report(
+        "serving/engine_paged_sampled", min(s[4] for s in ss) * 1e6,
+        f"tok/s={tps_s:.1f} itl_ms={min(s[3] for s in ss):.2f} "
+        f"vs_greedy={ratio:.2f}x (interleaved best-of-3)",
+    )
+    assert tps_s >= 0.9 * tps_g, (
+        f"sampled decode must stay within 10% of greedy tok/s "
+        f"(greedy {tps_g:.1f}, sampled {tps_s:.1f})"
+    )
 
     # ------------------------------------- shared-prefix workload
     # every request carries the same 480-token task preamble + a unique

@@ -1,8 +1,10 @@
-"""Continuous-batching serving: submit a stream of variable-length protein
-prompts to the slot engine and watch per-request latency — requests are
+"""Continuous-batching serving through the Generation API v2 ``LLM``
+facade: submit a stream of variable-length protein prompts, each with its
+own ``SamplingParams``, and watch per-request latency — requests are
 admitted/released at iteration granularity, never padded to each other.
 
-Runs the same stream under three configurations and checks they agree:
+Runs the same greedy stream under three engine configurations and checks
+they agree token-for-token:
 
   * ``dense`` — one (slots, max_len) buffer per layer, O(B·T) decode write;
   * ``paged`` — block-table pages over a shared pool (the production
@@ -15,6 +17,10 @@ Runs the same stream under three configurations and checks they agree:
     interleaved with decode steps so long prompts never stall in-flight
     decodes.
 
+then demos the v2 surface: a mixed greedy/sampled batch (per-request
+temperature/top-k/top-p/seed, sampled on device by the fused kernel) and
+token-level streaming.
+
     PYTHONPATH=src python examples/serve_continuous.py
 """
 import numpy as np
@@ -22,22 +28,23 @@ import jax
 
 from repro.configs import get_smoke_config
 from repro.models.model import build_model
-from repro.serving.engine import Engine, Request
+from repro.serving.api import LLM
+from repro.serving.sampling import SamplingParams
 
 
 def serve(model, params, requests, layout, **kw):
-    eng = Engine(model, params, slots=4, max_len=96,
-                 cache_layout=layout, page_size=16, **kw)
-    for uid, prompt, max_new in requests:
-        eng.submit(Request(uid=uid, prompt=prompt, max_new=max_new))
-    done = eng.run()
+    llm = LLM(model, params, slots=4, max_len=96,
+              cache_layout=layout, page_size=16, **kw)
+    prompts = [p for _, p, _ in requests]
+    plist = [SamplingParams(max_new=n) for _, _, n in requests]
+    outs = llm.generate(prompts, plist)
+    eng = llm.engine
     tag = layout + ("+prefix" if kw.get("prefix_cache") else "")
-    print(f"[{tag}] served {len(done)} requests on {eng.B} slots")
-    for r in sorted(done, key=lambda r: r.uid):
-        lat = (r.t_done - r.t_submit) * 1e3
-        ttft = (r.t_first - r.t_submit) * 1e3
-        print(f"  req {r.uid}: prompt={len(r.prompt):2d} new={len(r.output):2d} "
-              f"ttft={ttft:7.1f}ms total={lat:7.1f}ms")
+    print(f"[{tag}] served {len(outs)} requests on {eng.B} slots")
+    for c in outs:
+        print(f"  req {c.index}: prompt={len(prompts[c.index]):2d} "
+              f"new={len(c.tokens):2d} ttft={c.ttft_s * 1e3:7.1f}ms "
+              f"total={c.latency_s * 1e3:7.1f}ms [{c.finish_reason}]")
     if layout == "paged":
         eng.alloc.check_invariants()
         print(f"  page pool: {eng.alloc.num_pages - 1} usable pages of "
@@ -46,7 +53,7 @@ def serve(model, params, requests, layout, **kw):
             st = eng.alloc.stats
             print(f"  prefix cache: {st['hit_tokens']} tokens reused, "
                   f"{st['cow_copies']} COW copies, {st['evictions']} evictions")
-    return {r.uid: r.output for r in done}
+    return {requests[c.index][0]: c.tokens for c in outs}
 
 
 def main() -> None:
@@ -77,6 +84,34 @@ def main() -> None:
     assert dense == paged, "paged layout diverged from dense"
     assert dense == prefix, "prefix caching / chunked prefill changed tokens"
     print("dense, paged, and prefix-cached engines produced identical tokens")
+
+    # ---- v2 surface: heterogeneous per-request sampling in ONE batch ----
+    llm = LLM(model, params, slots=4, max_len=96)
+    prompts = [p for _, p, _ in requests[:4]]
+    mixed = [
+        SamplingParams(max_new=8),                                  # greedy
+        SamplingParams(temperature=1.0, top_k=20, seed=1, max_new=8),
+        SamplingParams(temperature=0.7, top_p=0.9, seed=2, max_new=8,
+                       logprobs=True),
+        SamplingParams(temperature=1.2, top_k=40, top_p=0.95, seed=3,
+                       max_new=8),
+    ]
+    outs = llm.generate(prompts, mixed)
+    print("\nmixed greedy/sampled batch (fused on-device sampler):")
+    for c in outs:
+        lp = (f" logp[0]={c.logprobs[0]:.2f}" if c.logprobs else "")
+        print(f"  req {c.index}: {c.tokens}{lp}")
+    # fixed seeds are reproducible regardless of batch composition
+    again = llm.generate(prompts[2:3], mixed[2:3])
+    assert again[0].tokens == outs[2].tokens, "fixed-seed sampling not reproducible"
+    print("fixed-seed request reproduced identically outside the batch")
+
+    # ---- v2 surface: token-level streaming ----
+    print("\nstreaming (tokens interleave across requests as decoded):")
+    line = []
+    for ch in llm.stream(prompts[:2], SamplingParams(max_new=6)):
+        line.append(f"r{ch.index}:{ch.token}{'#' if ch.done else ''}")
+    print("  " + " ".join(line))
 
 
 if __name__ == "__main__":

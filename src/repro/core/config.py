@@ -228,7 +228,13 @@ class TrainConfig:
 class ServeConfig:
     max_seq_len: int = 32768
     batch_size: int = 128
+    # default sampling knobs, mapped into a default SamplingParams by the
+    # LLM facade (serving/api.py); individual requests override them with
+    # their own per-request SamplingParams
     temperature: float = 0.0   # 0 = greedy
+    top_k: int = 0             # 0 = disabled
+    top_p: float = 1.0         # 1.0 = disabled
+    seed: int = 0              # keys the counter-based sampling PRNG
     # KV-cache layout for the continuous-batching engine: "dense" per-slot
     # buffers, or "paged" block-table pages over a shared pool
     # (serving/paged_cache.py + kernels/paged_attention.py)

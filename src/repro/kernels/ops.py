@@ -423,6 +423,46 @@ def paged_kv_update(
 
 
 # --------------------------------------------------------------------- #
+# fused sampling (serving): per-slot top-k/top-p filter + categorical
+# --------------------------------------------------------------------- #
+def sample_tokens(
+    logits: jax.Array,       # (B, V) last-position logits
+    temperature: jax.Array,  # (B,) f32; <= 0 means greedy argmax
+    top_k: jax.Array,        # (B,) i32; 0 disables the top-k filter
+    top_p: jax.Array,        # (B,) f32; 1.0 disables the top-p filter
+    seed: jax.Array,         # (B,) per-request PRNG seed
+    step: jax.Array,         # (B,) generation index (tokens emitted so far)
+    *,
+    impl: str = "auto",
+    interpret: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    """Sample one token per row with heterogeneous per-row params.
+
+    Returns ``(tok (B,) i32, logp (B,) f32)`` — the chosen token and its
+    log-probability under the filtered, temperature-scaled, renormalized
+    distribution (greedy rows: under the full T=1 softmax).
+
+    Selection runs entirely on device: ``pallas`` is the fused VMEM
+    kernel (dual-bisection thresholds + counter-based gumbel-max,
+    ``sampling.py``), ``xla`` is the same row math batched over B (the
+    two agree token-for-token — the noise stream is a pure integer hash
+    of (seed, step, vocab id), not backend PRNG state).  ``naive`` is the
+    sort-based oracle in ``ref.py``.  Called inside the serving engine's
+    jitted decode step so token selection adds zero host syncs.
+    """
+    impl, interpret = _resolve(impl, interpret)
+    from repro.kernels import sampling as _sp
+
+    if impl == "pallas":
+        return _sp.fused_sample(
+            logits, temperature, top_k, top_p, seed, step, interpret=interpret
+        )
+    if impl == "naive":
+        return ref.sample_ref(logits, temperature, top_k, top_p, seed, step)
+    return _sp.sample_xla(logits, temperature, top_k, top_p, seed, step)
+
+
+# --------------------------------------------------------------------- #
 # norms
 #
 # The xla paths use custom VJPs engineered so every FULL-SIZE fusion output

@@ -131,3 +131,63 @@ def ssd_ref(
     hT, ys = jax.lax.scan(step, h0, xs)
     y = jnp.moveaxis(ys, 0, 1) + xf * D.astype(jnp.float32)[None, None, :, None]
     return y.astype(x.dtype), hT
+
+
+# --------------------------------------------------------------------- #
+# sampling
+# --------------------------------------------------------------------- #
+def sample_ref(
+    logits: jax.Array,       # (B, V)
+    temperature: jax.Array,  # (B,) f32; <= 0 = greedy
+    top_k: jax.Array,        # (B,) i32; 0 disables
+    top_p: jax.Array,        # (B,) f32; 1.0 disables
+    seed: jax.Array,         # (B,)
+    step: jax.Array,         # (B,)
+) -> Tuple[jax.Array, jax.Array]:
+    """Sort-based oracle for ``ops.sample_tokens``.
+
+    Computes the exact top-k / top-p kept set by sorting the scaled
+    logits (the textbook definition), then draws the token with the same
+    counter-based gumbel noise the fused kernel uses — so on
+    non-degenerate inputs (no two logits within bisection resolution of
+    the filter boundary) it agrees token-for-token with ``xla``/
+    ``pallas``.
+    """
+    from repro.kernels.sampling import NEG_INF, gumbel_noise
+
+    x = logits.astype(jnp.float32)
+    B, V = x.shape
+    valid = x > NEG_INF / 2
+    greedy = (temperature <= 0)[:, None]
+    t = jnp.where(greedy, 1.0, temperature.astype(jnp.float32)[:, None])
+    z = jnp.where(valid, x / t, NEG_INF)
+    srt = jnp.sort(z, axis=-1)[:, ::-1]                # descending
+    k = jnp.where(top_k <= 0, V, jnp.clip(top_k, 1, V))
+    kth = jnp.take_along_axis(srt, (k - 1)[:, None], axis=-1)
+    probs = jax.nn.softmax(srt, axis=-1)
+    cum = jnp.cumsum(probs, axis=-1)
+    # keep the minimal prefix whose mass reaches top_p (crossing token in)
+    keep_sorted = (cum - probs) < jnp.clip(top_p, 1e-9, 1.0)[:, None]
+    n = jnp.sum(keep_sorted, axis=-1, keepdims=True)
+    pth = jnp.take_along_axis(srt, n - 1, axis=-1)
+    tau = jnp.maximum(kth, pth)
+    tau = jnp.where(greedy, jnp.float32(NEG_INF), tau)
+    keep = valid & (z >= tau)
+
+    idx = jnp.broadcast_to(jnp.arange(V, dtype=jnp.int32)[None], (B, V))
+    g = jnp.where(
+        greedy,
+        0.0,
+        gumbel_noise(
+            seed.astype(jnp.uint32)[:, None],
+            step.astype(jnp.uint32)[:, None],
+            idx.astype(jnp.uint32),
+        ),
+    )
+    y = jnp.where(keep, z + g, NEG_INF)
+    tok = jnp.argmax(y, axis=-1)
+    m = jnp.max(z, axis=-1)
+    z_tok = jnp.take_along_axis(z, tok[:, None], axis=-1)[:, 0]
+    Zf = jnp.sum(jnp.where(keep, jnp.exp(z - m[:, None]), 0.0), axis=-1)
+    logp = z_tok - m - jnp.log(jnp.maximum(Zf, 1e-30))
+    return tok.astype(jnp.int32), logp

@@ -1,0 +1,245 @@
+"""Pallas TPU fused sampling: per-slot top-k/top-p filter + categorical.
+
+One kernel call samples the next token for every serving slot from a
+(B, V) logit panel, with *heterogeneous* per-slot sampling params —
+temperature, top-k, top-p and PRNG state are (B,) vectors, so a batch can
+mix greedy protein-embedding traffic with high-temperature molecule
+sampling (the MolMIM workload) in a single jitted decode step.  Grid is
+(B,); each step owns one slot's full (padded) vocab row in VMEM and
+writes two scalars: the sampled token id and its log-probability.
+
+Three design points make this a single fused pass with no sort and no
+host involvement:
+
+* **Dual bisection thresholds.**  Top-k and top-p both reduce to "keep
+  ``z >= tau``" for a per-row threshold.  Instead of sorting the vocab
+  (no Mosaic lowering, O(V log V)), ``tau_k`` / ``tau_p`` are found by a
+  fixed 32-iteration bisection over the logit range, maintaining the
+  invariants ``count(z >= lo_k) >= k`` and ``mass(z >= lo_p) >= p·Z``
+  — each iteration is two masked VMEM reductions over the row.  32
+  f32 halvings exhaust float resolution, so the kept set matches the
+  sort-based oracle (``ref.sample_ref``) except for values within one
+  ulp of the k-th/top-p boundary.
+
+* **Counter-based hash PRNG.**  Noise for slot ``b`` at generation step
+  ``t`` is ``fmix32(fmix32(seed_b + C0) ^ t·C1) ^ i·C2`` pushed through
+  the murmur3 finalizer — a pure function of (request seed, token index,
+  vocab id).  No carried PRNG state, no dependence on batch composition
+  or slot index: the same request sampled in any slot of any batch mix
+  reproduces the same tokens, and the identical integer math runs in the
+  XLA fallback, so ``xla`` and ``pallas`` agree token-for-token.
+
+* **Gumbel-max selection.**  ``argmax(z + g)`` over the kept set samples
+  the renormalized categorical without ever normalizing — one more VMEM
+  reduction.  Greedy rows (``temperature <= 0``) take the same path with
+  zero noise and no filter, which degrades exactly to first-index
+  ``argmax`` (bit-identical to ``jnp.argmax`` greedy decoding).
+
+The row math lives in ``_sample_rows`` and is shared verbatim by the
+kernel body (rows=1) and the batched XLA fallback (rows=B), keeping the
+two implementations in lockstep by construction.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+_BISECT_ITERS = 32
+
+
+# --------------------------------------------------------------------- #
+# counter-based noise (murmur3 fmix32 stream)
+# --------------------------------------------------------------------- #
+def _fmix32(h: jax.Array) -> jax.Array:
+    """murmur3 finalizer: full-avalanche 32-bit mix (uint32 in/out)."""
+    h = h ^ (h >> jnp.uint32(16))
+    h = h * jnp.uint32(0x85EBCA6B)
+    h = h ^ (h >> jnp.uint32(13))
+    h = h * jnp.uint32(0xC2B2AE35)
+    h = h ^ (h >> jnp.uint32(16))
+    return h
+
+
+def gumbel_noise(seed: jax.Array, step: jax.Array, idx: jax.Array) -> jax.Array:
+    """Gumbel(0,1) noise as a pure function of (seed, step, vocab idx).
+
+    ``seed``/``step``: (R, 1) uint32; ``idx``: (R, V) uint32.  The same
+    (seed, step, idx) triple yields the same noise on every backend and
+    in every batch composition — this is what makes fixed-seed sampling
+    reproducible regardless of which slots share the decode step.
+    """
+    h = _fmix32(seed + jnp.uint32(0x9E3779B9))
+    h = _fmix32(h ^ (step * jnp.uint32(0x85EBCA77)))
+    u = _fmix32(h ^ (idx * jnp.uint32(0x9E3779B1)))
+    # top 24 bits -> uniform strictly inside (0, 1); +0.5 keeps log finite
+    uf = ((u >> jnp.uint32(8)).astype(jnp.float32) + 0.5) * (1.0 / (1 << 24))
+    return -jnp.log(-jnp.log(uf))
+
+
+# --------------------------------------------------------------------- #
+# shared row math (kernel body with rows=1, XLA fallback with rows=B)
+# --------------------------------------------------------------------- #
+def _sample_rows(x, temp, top_k, top_p, seed, step, idx, *,
+                 iters: int = _BISECT_ITERS):
+    """Sample one token per row of ``x``.
+
+    ``x``: (R, V) f32 raw logits (padded / masked-vocab entries at
+    ``NEG_INF``); ``temp``/``top_p`` (R, 1) f32, ``top_k`` (R, 1) i32
+    (``0`` disables), ``seed``/``step`` (R, 1) uint32, ``idx`` (R, V)
+    i32 vocab ids.  Returns ``(tok (R,1) i32, logp (R,1) f32)`` where
+    ``logp`` is the log-probability of the chosen token under the
+    filtered, temperature-scaled, renormalized distribution (for greedy
+    rows: under the full T=1 softmax).
+    """
+    V = x.shape[-1]
+    valid = x > NEG_INF / 2
+    greedy = temp <= 0.0
+    t = jnp.where(greedy, 1.0, temp)
+    z = jnp.where(valid, x / t, NEG_INF)
+    m = jnp.max(z, axis=-1, keepdims=True)
+    mn = jnp.min(jnp.where(valid, z, m), axis=-1, keepdims=True)
+    e = jnp.where(valid, jnp.exp(z - m), 0.0)
+    Z = jnp.sum(e, axis=-1, keepdims=True)
+
+    k = jnp.where(top_k <= 0, jnp.int32(V), jnp.clip(top_k, 1, V))
+    k = k.astype(jnp.float32)
+    p = jnp.clip(top_p, 1e-9, 1.0)
+    pZ = p * Z
+    hi0 = m + 1.0
+
+    def body(_, c):
+        lo_k, hi_k, lo_p, hi_p = c
+        mid = 0.5 * (lo_k + hi_k)
+        cnt = jnp.sum(jnp.where(z >= mid, 1.0, 0.0), axis=-1, keepdims=True)
+        ok = cnt >= k
+        lo_k = jnp.where(ok, mid, lo_k)
+        hi_k = jnp.where(ok, hi_k, mid)
+        mid = 0.5 * (lo_p + hi_p)
+        mass = jnp.sum(jnp.where(z >= mid, e, 0.0), axis=-1, keepdims=True)
+        ok = mass >= pZ
+        lo_p = jnp.where(ok, mid, lo_p)
+        hi_p = jnp.where(ok, hi_p, mid)
+        return lo_k, hi_k, lo_p, hi_p
+
+    def _filtered(_):
+        lo_k, _, lo_p, _ = jax.lax.fori_loop(0, iters, body, (mn, hi0, mn, hi0))
+        # the intersection of both filters; never excludes the argmax token
+        tau = jnp.minimum(jnp.maximum(lo_k, lo_p), m)
+        return tau, gumbel_noise(seed, step, idx.astype(jnp.uint32))
+
+    def _argmax_only(_):
+        return mn, jnp.zeros_like(x)
+
+    # all-greedy rows (the Pallas kernel sees one row per grid step, the
+    # XLA path a whole batch): skip the bisection sweeps and the noise
+    # hash entirely — greedy decode costs what argmax costs
+    tau, g = jax.lax.cond(jnp.all(greedy), _argmax_only, _filtered, None)
+    tau = jnp.where(greedy, mn, tau)
+    g = jnp.where(greedy, 0.0, g)
+    keep = valid & (z >= tau)
+    y = jnp.where(keep, z + g, NEG_INF)
+    ymax = jnp.max(y, axis=-1, keepdims=True)
+    # first index attaining the max — jnp.argmax's tie-break, so the
+    # greedy path is bit-identical to argmax decoding
+    tok = jnp.min(
+        jnp.where(y == ymax, idx, jnp.int32(V)), axis=-1, keepdims=True
+    )
+    z_tok = jnp.max(jnp.where(idx == tok, z, NEG_INF), axis=-1, keepdims=True)
+    Zf = jnp.sum(jnp.where(keep, e, 0.0), axis=-1, keepdims=True)
+    logp = z_tok - m - jnp.log(jnp.maximum(Zf, 1e-30))
+    return tok.astype(jnp.int32), logp
+
+
+def sample_xla(logits, temperature, top_k, top_p, seed, step):
+    """Batched XLA fallback: the shared row math over all rows at once."""
+    B, V = logits.shape
+    idx = jnp.broadcast_to(jnp.arange(V, dtype=jnp.int32)[None], (B, V))
+    tok, logp = _sample_rows(
+        logits.astype(jnp.float32),
+        temperature.astype(jnp.float32)[:, None],
+        top_k.astype(jnp.int32)[:, None],
+        top_p.astype(jnp.float32)[:, None],
+        seed.astype(jnp.uint32)[:, None],
+        step.astype(jnp.uint32)[:, None],
+        idx,
+    )
+    return tok[:, 0], logp[:, 0]
+
+
+# --------------------------------------------------------------------- #
+# Pallas kernel
+# --------------------------------------------------------------------- #
+def _sample_kernel(x_ref, temp_ref, topk_ref, topp_ref, seed_ref, step_ref,
+                   tok_ref, logp_ref):
+    x = x_ref[...]                                        # (1, Vp) f32
+    idx = jax.lax.broadcasted_iota(jnp.int32, x.shape, 1)
+    tok, logp = _sample_rows(
+        x,
+        temp_ref[...].reshape(1, 1),
+        topk_ref[...].reshape(1, 1),
+        topp_ref[...].reshape(1, 1),
+        seed_ref[...].reshape(1, 1),
+        step_ref[...].reshape(1, 1),
+        idx,
+    )
+    tok_ref[...] = tok
+    logp_ref[...] = logp
+
+
+def fused_sample(
+    logits: jax.Array,       # (B, V) — any float dtype
+    temperature: jax.Array,  # (B,) f32; <= 0 means greedy argmax
+    top_k: jax.Array,        # (B,) i32; 0 disables
+    top_p: jax.Array,        # (B,) f32; 1.0 disables
+    seed: jax.Array,         # (B,) per-request PRNG seed
+    step: jax.Array,         # (B,) generation index (tokens emitted so far)
+    *,
+    interpret: bool = False,
+):
+    """Fused per-slot filter + categorical: one kernel, (B,) heterogeneous
+    params, returns ``(tok (B,) i32, logp (B,) f32)``.
+
+    The whole (padded) vocab row sits in VMEM per grid step — fp32 rows
+    up to ~1M vocab fit the 16MB budget comfortably.  Padding columns are
+    ``NEG_INF`` so they are invisible to the filter, the softmax mass and
+    the gumbel argmax.
+    """
+    B, V = logits.shape
+    Vp = max(128, V + (-V % 128))
+    x = logits.astype(jnp.float32)
+    if Vp != V:
+        x = jnp.pad(x, ((0, 0), (0, Vp - V)), constant_values=NEG_INF)
+
+    tok, logp = pl.pallas_call(
+        _sample_kernel,
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((1, Vp), lambda b: (b, 0)),
+            pl.BlockSpec((1,), lambda b: (b,)),
+            pl.BlockSpec((1,), lambda b: (b,)),
+            pl.BlockSpec((1,), lambda b: (b,)),
+            pl.BlockSpec((1,), lambda b: (b,)),
+            pl.BlockSpec((1,), lambda b: (b,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1), lambda b: (b, 0)),
+            pl.BlockSpec((1, 1), lambda b: (b, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, 1), jnp.int32),
+            jax.ShapeDtypeStruct((B, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(
+        x,
+        temperature.astype(jnp.float32),
+        top_k.astype(jnp.int32),
+        top_p.astype(jnp.float32),
+        seed.astype(jnp.uint32),
+        step.astype(jnp.uint32),
+    )
+    return tok[:, 0], logp[:, 0]

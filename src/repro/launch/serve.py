@@ -1,22 +1,25 @@
-"""Batched serving launcher: prefill a batch of prompts, decode greedily.
+"""Serving launcher over the Generation API v2 ``LLM`` facade.
 
-    PYTHONPATH=src python -m repro.launch.serve --arch molmim-65m --smoke \
-        --batch 4 --prompt-len 16 --gen 16
-
-Continuous-batching mode drives the slot engine instead of a static
-batch; ``--cache-layout paged`` serves from the paged KV cache (block
-tables + Pallas paged attention / scatter writes), and ``--prefix-cache``
-/ ``--prefill-chunk N`` enable content-addressed prefix sharing and
-bounded chunked prefill on top of it:
+Continuous-batching mode (decoder-only archs) drives the slot engine
+through ``serving/api.py::LLM``; ``--cache-layout paged`` serves from the
+paged KV cache, ``--prefix-cache`` / ``--prefill-chunk N`` layer
+content-addressed prefix sharing and bounded chunked prefill on top, and
+``--temperature/--top-k/--top-p/--seed`` set the per-request sampling
+params (greedy by default — fused on-device sampling either way):
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-7b --smoke \
         --continuous --cache-layout paged --page-size 16 --requests 16 \
-        --prefix-cache --prefill-chunk 32
+        --prefix-cache --prefill-chunk 32 --temperature 0.8 --top-k 40
+
+The static-batch path (``generate``) remains for encoder-decoder /
+vision-frontend archs the slot engine does not admit; it is a deprecated
+shim for decoder-only callers.
 """
 from __future__ import annotations
 
 import argparse
 import time
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -29,60 +32,90 @@ from repro.models.model import build_model
 
 def generate(
     model, params, batch, *, max_len: int, steps: int, temperature: float = 0.0,
-    seed: int = 0,
+    seed: int = 0, top_k: int = 0, top_p: float = 1.0,
 ):
-    """Greedy (or sampled) generation loop; returns (tokens (B, steps), toks/s)."""
+    """Static-batch generation loop; returns (tokens (B, steps), toks/s).
+
+    .. deprecated:: Generation API v2
+        Decoder-only serving should use ``serving.api.LLM`` (per-request
+        ``SamplingParams``, continuous batching, streaming).  This shim
+        stays for encoder-decoder / vision-frontend static batches; its
+        token selection now runs through the same fused on-device
+        sampler as the engine (``ops.sample_tokens``), so greedy output
+        is unchanged and sampled output is seed-reproducible.
+    """
+    warnings.warn(
+        "launch.serve.generate is a legacy static-batch path; use "
+        "serving.api.LLM for decoder-only serving",
+        DeprecationWarning, stacklevel=2,
+    )
+    from repro.kernels import ops
+
+    B = batch["tokens"].shape[0]
+    impl = model.cfg.kernel_impl
     prefill = jax.jit(lambda p, b: model.prefill(p, b, max_len))
-    decode = jax.jit(model.decode_step)
+
+    def step_fn(p, cache, logits, gen_idx):
+        tok, _ = ops.sample_tokens(
+            logits[:, -1],
+            jnp.full((B,), temperature, jnp.float32),
+            jnp.full((B,), top_k, jnp.int32),
+            jnp.full((B,), top_p, jnp.float32),
+            jnp.arange(B, dtype=jnp.uint32) + jnp.uint32(seed),
+            jnp.full((B,), gen_idx, jnp.uint32),
+            impl=impl,
+        )
+        logits, cache = model.decode_step(p, cache, tok[:, None])
+        return tok, logits, cache
+
+    step = jax.jit(step_fn)
     logits, cache = prefill(params, batch)
-    key = jax.random.PRNGKey(seed)
     outs = []
     t0 = time.time()
     for i in range(steps):
-        if temperature > 0:
-            key, sub = jax.random.split(key)
-            nxt = jax.random.categorical(sub, logits[:, -1] / temperature)[:, None]
-        else:
-            nxt = jnp.argmax(logits[:, -1], axis=-1)[:, None]
-        outs.append(nxt)
-        logits, cache = decode(params, cache, nxt.astype(jnp.int32))
+        tok, logits, cache = step(params, cache, logits, i)
+        outs.append(tok[:, None])
     toks = jnp.concatenate(outs, axis=1)
+    jax.block_until_ready(toks)
     dt = time.time() - t0
     return toks, (toks.size / dt)
 
 
 def serve_continuous(model, params, sc: ServeConfig, *, gen: int,
                      prompt_len: int, requests: int) -> None:
-    """Drive the continuous-batching engine (dense or paged KV cache)."""
-    from repro.serving.engine import Engine, Request
+    """Drive the continuous-batching engine through the LLM facade."""
+    from repro.serving.api import LLM
+    from repro.serving.sampling import SamplingParams
 
     cfg = model.cfg
     rng = np.random.default_rng(0)
-    eng = Engine(
-        model, params, slots=sc.batch_size, max_len=sc.max_seq_len,
-        cache_layout=sc.cache_layout, page_size=sc.page_size,
-        prefix_cache=sc.prefix_cache, prefill_chunk=sc.prefill_chunk,
-    )
-    t0 = time.time()
+    llm = LLM.from_config(model, params, sc)
     # a shared task preamble on half the requests exercises the prefix
     # cache the way protein/chemistry serving does (fixed scaffolds);
     # at least one full page long, else no block can ever hash-hit
     preamble = rng.integers(
         5, cfg.vocab_size, size=max(sc.page_size, prompt_len // 2)
     ).astype(np.int32)
+    prompts, plist = [], []
     for i in range(requests):
         L = int(rng.integers(max(1, prompt_len // 2), prompt_len + 1))
         prompt = rng.integers(5, cfg.vocab_size, size=L).astype(np.int32)
         if sc.prefix_cache and i % 2 == 0:
             prompt = np.concatenate([preamble, prompt])[: sc.max_seq_len - gen - 1]
-        eng.submit(Request(uid=i, prompt=prompt, max_new=gen))
-    done = eng.run()
+        prompts.append(prompt)
+        plist.append(SamplingParams(
+            temperature=sc.temperature, top_k=sc.top_k, top_p=sc.top_p,
+            seed=sc.seed + i, max_new=gen,
+        ))
+    t0 = time.time()
+    outs = llm.generate(prompts, plist)
     wall = time.time() - t0
-    toks = sum(len(r.output) for r in done)
-    ttft = np.mean([r.t_first - r.t_submit for r in done]) * 1e3
-    itl = np.mean([
-        (r.t_done - r.t_first) / max(len(r.output) - 1, 1) for r in done
-    ]) * 1e3
+    eng = llm.engine
+    toks = sum(len(c.tokens) for c in outs)
+    ttft = float(np.mean([c.ttft_s for c in outs])) * 1e3
+    itl = float(np.mean([
+        (c.latency_s - c.ttft_s) / max(len(c.tokens) - 1, 1) for c in outs
+    ])) * 1e3
     extra = ""
     if eng.alloc is not None and sc.prefix_cache:
         st = eng.alloc.stats
@@ -91,7 +124,7 @@ def serve_continuous(model, params, sc: ServeConfig, *, gen: int,
             f"{st['evictions']} evictions, {st['cow_copies']} COW copies"
         )
     print(
-        f"[{sc.cache_layout}] served {len(done)} requests / {toks} tokens "
+        f"[{sc.cache_layout}] served {len(outs)} requests / {toks} tokens "
         f"on {eng.B} slots: {toks / wall:.1f} tok/s, "
         f"ttft {ttft:.1f}ms, itl {itl:.2f}ms{extra}"
     )
@@ -105,6 +138,12 @@ def main() -> None:
     p.add_argument("--prompt-len", type=int, default=16)
     p.add_argument("--gen", type=int, default=16)
     p.add_argument("--temperature", type=float, default=0.0)
+    p.add_argument("--top-k", type=int, default=0,
+                   help="per-request top-k filter (0 = disabled)")
+    p.add_argument("--top-p", type=float, default=1.0,
+                   help="per-request nucleus filter (1.0 = disabled)")
+    p.add_argument("--seed", type=int, default=0,
+                   help="sampling PRNG seed (request i uses seed+i)")
     p.add_argument("--continuous", action="store_true",
                    help="continuous-batching engine instead of a static batch")
     p.add_argument("--cache-layout", choices=("dense", "paged"),
@@ -126,6 +165,7 @@ def main() -> None:
         sc = ServeConfig(
             max_seq_len=max_prompt + a.gen + cfg.num_frontend_tokens + 1,
             batch_size=a.batch, temperature=a.temperature,
+            top_k=a.top_k, top_p=a.top_p, seed=a.seed,
             cache_layout=a.cache_layout, page_size=a.page_size,
             prefix_cache=a.prefix_cache, prefill_chunk=a.prefill_chunk,
         )
@@ -151,11 +191,14 @@ def main() -> None:
             rng.normal(size=(a.batch, cfg.num_frontend_tokens, cfg.d_model)),
             jnp.float32,
         )
-    toks, tps = generate(
-        model, params, batch,
-        max_len=a.prompt_len + a.gen + cfg.num_frontend_tokens + 1,
-        steps=a.gen, temperature=a.temperature,
-    )
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)  # shim, by design
+        toks, tps = generate(
+            model, params, batch,
+            max_len=a.prompt_len + a.gen + cfg.num_frontend_tokens + 1,
+            steps=a.gen, temperature=a.temperature, seed=a.seed,
+            top_k=a.top_k, top_p=a.top_p,
+        )
     print(f"generated {toks.shape} tokens at {tps:.1f} tok/s")
     print(toks[:, :12])
 

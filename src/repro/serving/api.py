@@ -1,0 +1,202 @@
+"""``LLM`` — the one-stop generation facade over the serving engine.
+
+Generation API v2's public surface: construct an ``LLM`` once (it owns a
+continuous-batching ``Engine`` with whatever cache layout / prefix-cache
+/ chunked-prefill configuration serving needs), then
+
+* ``LLM.generate(prompts, params)`` — batch completion: submits every
+  prompt with its own ``SamplingParams`` (one shared instance or a
+  per-prompt list), drives the engine to completion, and returns
+  ``Completion`` records in input order;
+* ``LLM.stream(prompts, params)`` — iteration-level streaming: a
+  generator yielding one ``StreamChunk`` per generated token, in the
+  order the lockstep engine produces them — tokens from different
+  requests interleave exactly as they are decoded.
+
+This subsumes the old ``launch/serve.py::generate`` static-batch loop
+and raw ``Engine``/``Request`` wiring for decoder-only serving; both
+remain as thin back-compat paths.
+
+    llm = LLM(model, params, slots=8, max_len=512, cache_layout="paged")
+    outs = llm.generate(prompts, SamplingParams(temperature=0.8, top_k=40))
+    for chunk in llm.stream(prompts, SamplingParams(max_new=64)):
+        print(chunk.index, chunk.token)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Iterator, List, Optional, Sequence, Union
+
+import numpy as np
+
+from repro.core.config import ServeConfig
+from repro.serving.engine import Engine, Request
+from repro.serving.sampling import SamplingParams
+
+ParamsArg = Union[None, SamplingParams, Sequence[Optional[SamplingParams]]]
+
+
+@dataclasses.dataclass
+class Completion:
+    """One finished request, in the order its prompt was passed in."""
+
+    index: int
+    tokens: List[int]
+    finish_reason: str                    # "stop" | "length"
+    logprobs: Optional[List[float]] = None
+    ttft_s: float = 0.0                   # submit -> first token
+    latency_s: float = 0.0                # submit -> done
+
+
+@dataclasses.dataclass
+class StreamChunk:
+    """One newly decoded token of one in-flight request."""
+
+    index: int
+    token: int
+    logprob: Optional[float] = None
+    done: bool = False
+    finish_reason: str = ""
+
+
+class LLM:
+    """Unified generate/stream facade over the continuous-batching engine.
+
+    Construction mirrors ``Engine`` (or use ``LLM.from_config`` with a
+    ``ServeConfig``).  ``default_params`` applies to prompts submitted
+    without explicit params; it defaults to greedy.
+    """
+
+    def __init__(self, model, params, *, slots: int = 4, max_len: int = 512,
+                 cache_layout: str = "dense", page_size: int = 16,
+                 num_pages: int = 0, bucket_prompts: Optional[bool] = None,
+                 prefix_cache: bool = False, prefill_chunk: int = 0,
+                 extra_batch: Optional[Dict[str, Any]] = None,
+                 default_params: Optional[SamplingParams] = None):
+        self.engine = Engine(
+            model, params, slots=slots, max_len=max_len,
+            extra_batch=extra_batch, cache_layout=cache_layout,
+            page_size=page_size, num_pages=num_pages,
+            bucket_prompts=bucket_prompts, prefix_cache=prefix_cache,
+            prefill_chunk=prefill_chunk,
+        )
+        self.default_params = default_params or SamplingParams()
+        self._uid = 0
+
+    @classmethod
+    def from_config(cls, model, params, sc: ServeConfig, *,
+                    slots: Optional[int] = None,
+                    extra_batch: Optional[Dict[str, Any]] = None) -> "LLM":
+        """Build from a ``ServeConfig`` — its sampling knobs (temperature,
+        top_k, top_p, seed) become the default ``SamplingParams``."""
+        return cls(
+            model, params,
+            slots=slots if slots is not None else sc.batch_size,
+            max_len=sc.max_seq_len, cache_layout=sc.cache_layout,
+            page_size=sc.page_size, prefix_cache=sc.prefix_cache,
+            prefill_chunk=sc.prefill_chunk, extra_batch=extra_batch,
+            default_params=SamplingParams(
+                temperature=sc.temperature, top_k=sc.top_k, top_p=sc.top_p,
+                seed=sc.seed,
+            ),
+        )
+
+    # ---------------------------------------------------------- internals
+    def _submit(self, prompts, params: ParamsArg) -> List[Request]:
+        if isinstance(params, SamplingParams) or params is None:
+            plist: List[Optional[SamplingParams]] = [params] * len(prompts)
+        else:
+            plist = list(params)
+            if len(plist) != len(prompts):
+                raise ValueError(
+                    f"got {len(plist)} SamplingParams for {len(prompts)} prompts"
+                )
+        reqs = []
+        try:
+            for prompt, sp in zip(prompts, plist):
+                req = Request(
+                    uid=self._uid,
+                    prompt=np.asarray(prompt, np.int32),
+                    params=sp or self.default_params,
+                )
+                self._uid += 1
+                self.engine.submit(req)
+                reqs.append(req)
+        except Exception:
+            # mid-batch validation failure: withdraw what was already
+            # queued, or it would silently decode inside the next call
+            for r in reqs:
+                self.engine.cancel(r)
+            raise
+        return reqs
+
+    # ------------------------------------------------------------ public
+    def generate(self, prompts, params: ParamsArg = None,
+                 max_steps: int = 100_000) -> List[Completion]:
+        """Run every prompt to completion; results in input order."""
+        reqs = self._submit(prompts, params)
+        self.engine.run(max_steps=max_steps)
+        outs = []
+        for i, req in enumerate(reqs):
+            if not req.finish_reason:
+                # same leak-prevention as stream(): an overrun must not
+                # leave orphans decoding inside later calls
+                for r in reqs:
+                    if not r.finish_reason:
+                        self.engine.cancel(r)
+                raise RuntimeError(
+                    f"request {req.uid} unfinished after {max_steps} steps"
+                )
+            outs.append(Completion(
+                index=i, tokens=list(req.output),
+                finish_reason=req.finish_reason, logprobs=req.logprobs,
+                ttft_s=req.t_first - req.t_submit,
+                latency_s=req.t_done - req.t_submit,
+            ))
+        return outs
+
+    def stream(self, prompts, params: ParamsArg = None,
+               max_steps: int = 100_000) -> Iterator[StreamChunk]:
+        """Yield tokens as the engine decodes them, interleaved across
+        requests at iteration granularity (the continuous-batching
+        analogue of server-sent streaming).  Abandoning the iterator
+        (break / close) cancels the remaining in-flight requests and
+        frees their slots/pages.
+
+        Submission (and its validation errors) happens HERE, not at the
+        first ``next()`` — ``stream`` is not itself a generator, it
+        returns one, so a too-long prompt raises at the call site and
+        the TTFT clocks start at call time."""
+        reqs = self._submit(prompts, params)
+        return self._stream(reqs, max_steps)
+
+    def _stream(self, reqs: List[Request],
+                max_steps: int) -> Iterator[StreamChunk]:
+        emitted = [0] * len(reqs)
+        try:
+            for _ in range(max_steps):
+                self.engine.step()
+                for i, req in enumerate(reqs):
+                    out = req.output or []
+                    while emitted[i] < len(out):
+                        j = emitted[i]
+                        emitted[i] += 1
+                        last = emitted[i] == len(out)
+                        fin = req.finish_reason if last else ""
+                        yield StreamChunk(
+                            index=i, token=out[j],
+                            logprob=(req.logprobs[j] if req.logprobs else None),
+                            done=bool(fin), finish_reason=fin,
+                        )
+                if all(r.finish_reason for r in reqs):
+                    return
+            raise RuntimeError(
+                f"stream unfinished after {max_steps} engine steps"
+            )
+        finally:
+            # consumer broke out / closed the generator: cancel whatever
+            # is still in flight so orphaned requests don't keep decoding
+            # (and holding slots) inside later generate()/stream() calls
+            for req in reqs:
+                if not req.finish_reason:
+                    self.engine.cancel(req)

@@ -57,6 +57,21 @@ jitted prefill compiles once per bucket instead of once per unique prompt
 length.  Sound only for causal attention-only stacks (pad rows sit in the
 future of every real row; SSM state would carry pad garbage), so it is
 auto-disabled elsewhere.
+
+Generation API v2 (per-request sampling, on-device selection):
+
+Every request may carry a ``SamplingParams`` (``serving/sampling.py``) —
+temperature / top-k / top-p / seed / stop tokens / stop sequences /
+logprobs — and the numeric fields live on device as per-slot vectors.
+Token *selection* happens inside the jitted decode step
+(``ops.sample_tokens``: fused per-slot filter + categorical, greedy rows
+degrade to argmax), so the steady-state decode loop is token-in /
+token-out: the previous step's sampled tokens feed the next step without
+ever visiting the host, and the only host traffic per step is ONE bulk
+``jax.device_get`` of the sampled (tokens, logprobs) pair for
+bookkeeping and stop checks.  A request without params decodes greedily
+with its legacy ``max_new``/``eos_id`` fields — old ``Engine(...)`` call
+sites keep working unchanged; ``serving/api.py::LLM`` is the v2 facade.
 """
 from __future__ import annotations
 
@@ -69,6 +84,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.model import Model
+from repro.kernels import ops
 from repro.serving.paged_cache import (
     NULL_PAGE,
     PageAllocator,
@@ -76,6 +92,7 @@ from repro.serving.paged_cache import (
     pages_for,
     write_slot_paged,
 )
+from repro.serving.sampling import SamplingParams, StopChecker, effective_params
 
 
 @dataclasses.dataclass
@@ -84,8 +101,15 @@ class Request:
     prompt: np.ndarray           # (S,) int32
     max_new: int = 32
     eos_id: int = -1             # -1: never stops early
+    # v2 sampling intent; None = legacy greedy decode with max_new/eos_id.
+    # When set, a non-None params.max_new takes precedence (normalized at
+    # submit; params.max_new=None inherits the field above) and
+    # eos_id >= 0 folds into the stop-token set.
+    params: Optional[SamplingParams] = None
     # filled by the engine:
     output: Optional[List[int]] = None
+    logprobs: Optional[List[float]] = None   # per-token, if params.logprobs
+    finish_reason: str = ""                  # "stop" | "length" once done
     t_submit: float = 0.0
     t_first: float = 0.0
     t_done: float = 0.0
@@ -165,7 +189,6 @@ class Engine:
         cache["pos"] = jnp.zeros((slots,), jnp.int32)
         self.cache = cache
         self.slot_req: List[Optional[Request]] = [None] * slots
-        self.slot_last: np.ndarray = np.zeros((slots,), np.int32)
         self.slot_left: np.ndarray = np.zeros((slots,), np.int32)
         self.queue: List[Request] = []
         self.done: List[Request] = []
@@ -173,9 +196,84 @@ class Engine:
         self._prefilling: List[int] = []
         self._prefill_state: Dict[int, _Prefill] = {}
 
+        # per-slot sampling state.  The numeric params live on DEVICE
+        # ((B,) vectors consumed by the fused sampler inside the jitted
+        # decode step); the stop machinery is host-side per slot.
+        # ``gen`` is each slot's generation index (tokens emitted so
+        # far) — it keys the counter-based PRNG stream, so a fixed-seed
+        # request reproduces its tokens in any batch composition.
+        self.slot_sp: List[Optional[SamplingParams]] = [None] * slots
+        self.slot_stop: List[Optional[StopChecker]] = [None] * slots
+        self._samp: Dict[str, jax.Array] = {
+            "temp": jnp.zeros((slots,), jnp.float32),
+            "top_k": jnp.zeros((slots,), jnp.int32),
+            "top_p": jnp.ones((slots,), jnp.float32),
+            "seed": jnp.zeros((slots,), jnp.uint32),
+            "gen": jnp.zeros((slots,), jnp.int32),
+            "active": jnp.zeros((slots,), bool),
+        }
+        # token-in/token-out: the last sampled token per slot stays on
+        # device and feeds the next decode step directly
+        self._last_tok = jnp.zeros((slots,), jnp.int32)
+
         if bucket_prompts is None:
             bucket_prompts = paddable
         self.bucket_prompts = bucket_prompts
+
+        impl = cfg.kernel_impl
+
+        def _fused_step(params, cache, tok, samp):
+            """One decode iteration with ON-DEVICE token selection.
+
+            Everything the old loop did on the host — argmax, idle-slot
+            pos reset, next-token feedback — happens inside this one
+            jitted call: the engine only transfers the sampled (tok,
+            logp) pair back, once, per step."""
+            logits, cache = model.decode_step(params, cache, tok[:, None])
+            # idle / mid-prefill slots stepped in lockstep: reset their
+            # positions (their writes touched no live data)
+            cache["pos"] = jnp.where(samp["active"], cache["pos"], 0)
+            # idle slots read as greedy (temp 0) no matter what request
+            # last held them — otherwise one retired sampled request
+            # would defeat the sampler's all-greedy fast path for every
+            # later greedy-only step
+            nxt, logp = ops.sample_tokens(
+                logits[:, -1],
+                jnp.where(samp["active"], samp["temp"], 0.0),
+                samp["top_k"], samp["top_p"],
+                samp["seed"], samp["gen"], impl=impl,
+            )
+            nxt = jnp.where(samp["active"], nxt, 0)
+            samp = dict(samp, gen=samp["gen"] + samp["active"].astype(jnp.int32))
+            return nxt, logp, cache, samp
+
+        def _admit_slot(samp, last_tok, logits, slot, temp, k, p, seed):
+            """Sample a request's FIRST token from its prefill logits and
+            bind every per-slot device field in one jitted call —
+            admission costs one dispatch + one device_get instead of a
+            string of eager .at[].set updates (which showed up directly
+            in shared-prefix TTFT)."""
+            tok, logp = ops.sample_tokens(
+                logits[:, -1], temp[None], k[None], p[None], seed[None],
+                jnp.zeros((1,), jnp.uint32), impl=impl,
+            )
+            samp = dict(
+                samp,
+                temp=samp["temp"].at[slot].set(temp),
+                top_k=samp["top_k"].at[slot].set(k),
+                top_p=samp["top_p"].at[slot].set(p),
+                seed=samp["seed"].at[slot].set(seed),
+                gen=samp["gen"].at[slot].set(1),
+                active=samp["active"].at[slot].set(True),
+            )
+            return tok, logp, samp, last_tok.at[slot].set(tok[0])
+
+        def _release_slot(samp, pos, slot):
+            """Deactivate a finished slot and reset its pos (one call)."""
+            return (
+                dict(samp, active=samp["active"].at[slot].set(False)),
+                pos.at[slot].set(0),
+            )
 
         self._prefill = jax.jit(
             lambda p, b, L: model.prefill(p, b, max_len, length=L)
@@ -184,13 +282,20 @@ class Engine:
         # updates pools/buffers in place instead of copying the whole
         # cache every decode step / prefill chunk / page insert (each
         # call consumes self.cache[...] and the engine reassigns it)
-        self._decode = jax.jit(model.decode_step, donate_argnums=(1,))
+        self._decode = jax.jit(_fused_step, donate_argnums=(1, 3))
+        self._admit_slot = jax.jit(_admit_slot, donate_argnums=(0, 1))
+        self._release_slot = jax.jit(_release_slot, donate_argnums=(0, 1))
         self._insert_paged = jax.jit(write_slot_paged, donate_argnums=(0,))
         self._chunk = jax.jit(model.prefill_chunk, donate_argnums=(1,))
         self._copy = jax.jit(copy_pages, donate_argnums=(0,))
 
     # -------------------------------------------------------------- admin
     def submit(self, req: Request) -> None:
+        if req.params is not None and req.params.max_new is not None:
+            # v2 requests budget via params; normalize the legacy field so
+            # every admission/capacity path sees one source of truth
+            # (params.max_new=None inherits the request's own budget)
+            req.max_new = req.params.max_new
         if req.max_new < 1:
             raise ValueError(
                 f"request {req.uid}: max_new must be >= 1 (got {req.max_new})"
@@ -268,6 +373,39 @@ class Engine:
         self._push_table()
         self.cache["pos"] = self.cache["pos"].at[slot].set(pos)
 
+    # ------------------------------------------------- sampling plumbing
+    def _set_slot_params(self, slot: int, req: Request) -> None:
+        """Bind a request's sampling intent to its slot (host side: the
+        stop machinery).  The device-side per-slot vectors are written by
+        ``_emit_first`` in one fused call — nothing reads them while the
+        slot is inactive."""
+        sp = effective_params(req)
+        self.slot_sp[slot] = sp
+        self.slot_stop[slot] = StopChecker(sp, req.eos_id)
+
+    def _emit_first(self, slot: int, logits) -> None:
+        """Sample the first generated token from prefill logits (on
+        device, generation index 0), bind the slot's device-side sampling
+        state, record the token, and flip the slot to lockstep decoding
+        (or finish immediately on stop/budget)."""
+        req = self.slot_req[slot]
+        sp = self.slot_sp[slot]
+        tok_d, logp_d, self._samp, self._last_tok = self._admit_slot(
+            self._samp, self._last_tok, logits, np.int32(slot),
+            np.float32(sp.temperature), np.int32(sp.top_k),
+            np.float32(sp.top_p), np.uint32(sp.seed & 0xFFFFFFFF),
+        )
+        nxt, lp = jax.device_get((tok_d, logp_d))
+        t0 = int(nxt[0])
+        req.output = [t0]
+        req.logprobs = [float(lp[0])] if sp.logprobs else None
+        req.t_first = time.time()
+        self.slot_left[slot] = req.max_new - 1
+        fin = self.slot_stop[slot].check(req.output, self.slot_left[slot])
+        if fin:
+            req.finish_reason = fin
+            self._finish(slot)
+
     def _admit(self) -> None:
         for slot in range(self.B):
             if self.slot_req[slot] is not None or not self.queue:
@@ -292,6 +430,7 @@ class Engine:
                         jnp.asarray([dst], jnp.int32),
                     )
                 self.slot_req[slot] = req
+                self._set_slot_params(slot, req)
                 self._prefill_state[slot] = _Prefill(
                     req=req, prompt=req.prompt, done=plan.cached_tokens
                 )
@@ -312,7 +451,6 @@ class Engine:
                 batch[k] = v
             Lx = L + self.n_front          # valid decoder-input tokens
             logits, one_cache = self._prefill(self.params, batch, Lx)
-            nxt = int(jnp.argmax(logits[0, -1]))
             if self.alloc is not None:
                 pages = self.alloc.alloc(slot, need)
                 page = self.alloc.page_size
@@ -320,13 +458,9 @@ class Engine:
                 self._write_slot_paged(slot, one_cache, Lx, pages, n_tiles)
             else:
                 self._write_slot(slot, one_cache, int(one_cache["pos"]))
-            req.output = [nxt]
-            req.t_first = time.time()
             self.slot_req[slot] = req
-            self.slot_last[slot] = nxt
-            self.slot_left[slot] = req.max_new - 1
-            if nxt == req.eos_id or req.max_new <= 1:
-                self._finish(slot)
+            self._set_slot_params(slot, req)
+            self._emit_first(slot, logits)
 
     # ----------------------------------------------------- chunked prefill
     def _advance_prefill(self, slot: int) -> None:
@@ -350,27 +484,54 @@ class Engine:
             return
         # prompt complete: register its full blocks for future sharing,
         # make the slot's pages visible to the lockstep decode, emit the
-        # first generated token
-        req = st.req
+        # first generated token (sampled on device — no argmax roundtrip)
         self.alloc.register(slot, st.prompt)
         self._prefilling.remove(slot)
         del self._prefill_state[slot]
         self._push_table()
         self.cache["pos"] = self.cache["pos"].at[slot].set(L)
-        nxt = int(jnp.argmax(logits[0, -1]))
-        req.output = [nxt]
-        req.t_first = time.time()
-        self.slot_last[slot] = nxt
-        self.slot_left[slot] = req.max_new - 1
-        if nxt == req.eos_id or req.max_new <= 1:
-            self._finish(slot)
+        self._emit_first(slot, logits)
+
+    def cancel(self, req: Request) -> None:
+        """Abort a queued or in-flight request, releasing its slot/pages
+        immediately (``finish_reason="cancelled"``; the request still
+        lands in ``done`` with whatever tokens it produced).  Used by the
+        LLM facade when a stream consumer abandons its iterator — an
+        orphaned request must not keep decoding into other calls."""
+        # identity, not ==: the dataclass __eq__ tuple-compares the numpy
+        # prompt field, which raises on same-shape prompts
+        for i, q in enumerate(self.queue):
+            if q is req:
+                del self.queue[i]
+                req.finish_reason = "cancelled"
+                req.t_done = time.time()
+                self.done.append(req)
+                return
+        for slot in range(self.B):
+            if self.slot_req[slot] is req:
+                if slot in self._prefill_state:
+                    del self._prefill_state[slot]
+                    self._prefilling.remove(slot)
+                req.finish_reason = "cancelled"
+                self._finish(slot)
+                return
 
     def _finish(self, slot: int) -> None:
         req = self.slot_req[slot]
+        if not req.finish_reason:
+            req.finish_reason = "length"
         req.t_done = time.time()
         self.done.append(req)
         self.slot_req[slot] = None
         self.slot_left[slot] = 0
+        self.slot_sp[slot] = None
+        self.slot_stop[slot] = None
+        # one fused call: deactivate + reset pos so the slot comes back
+        # with clean semantics immediately (the in-jit reset only covers
+        # slots idle during a decode step)
+        self._samp, self.cache["pos"] = self._release_slot(
+            self._samp, self.cache["pos"], np.int32(slot)
+        )
         if self.alloc is not None:
             self.alloc.release(slot)
             self._push_table()
@@ -399,29 +560,26 @@ class Engine:
             if self.slot_req[s] is not None and s not in self._prefill_state
         ]
         if active:
-            tokens = jnp.asarray(self.slot_last[:, None], jnp.int32)
-            logits, self.cache = self._decode(self.params, self.cache, tokens)
-            nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1), np.int32)
+            # token-in/token-out: selection (and the idle-slot pos reset)
+            # happens inside the jitted step; the sampled tokens feed the
+            # next iteration straight from device memory, and the ONLY
+            # host traffic is this one bulk device_get per step
+            tok_d, logp_d, self.cache, self._samp = self._decode(
+                self.params, self.cache, self._last_tok, self._samp
+            )
+            self._last_tok = tok_d
+            nxt, logps = jax.device_get((tok_d, logp_d))
             for s in active:
                 req = self.slot_req[s]
-                req.output.append(int(nxt[s]))
-                self.slot_last[s] = nxt[s]
+                t = int(nxt[s])
+                req.output.append(t)
+                if req.logprobs is not None:
+                    req.logprobs.append(float(logps[s]))
                 self.slot_left[s] -= 1
-                if int(nxt[s]) == req.eos_id or self.slot_left[s] <= 0:
+                fin = self.slot_stop[s].check(req.output, self.slot_left[s])
+                if fin:
+                    req.finish_reason = fin
                     self._finish(s)
-        # slots without a decoding request also stepped (lockstep hardware
-        # batch): their positions advanced harmlessly — reset them to 0 so
-        # a stale slot is re-admitted with clean pos semantics (paged:
-        # their writes all land on the null page; mid-prefill slots are
-        # masked out of the device block table entirely)
-        idle = [
-            s for s in range(self.B)
-            if self.slot_req[s] is None or s in self._prefill_state
-        ]
-        if idle and active:
-            pos = np.array(self.cache["pos"])  # copy (device arrays are RO)
-            pos[idle] = 0
-            self.cache["pos"] = jnp.asarray(pos)
         return len(active)
 
     def run(self, max_steps: int = 10_000) -> List[Request]:

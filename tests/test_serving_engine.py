@@ -10,13 +10,14 @@ from repro.models.model import build_model
 from repro.serving.engine import Engine, Request
 
 
-def build(family="dense"):
+def build(family="dense", **over):
     kw = dict(
         name="t", family=family, num_layers=2, d_model=64, num_heads=4,
         num_kv_heads=2, d_ff=128, vocab_size=64, dtype="float32",
     )
     if family == "ssm":
         kw.update(d_ff=0, num_kv_heads=4, ssm_state=16, ssm_headdim=32, ssm_chunk=8)
+    kw.update(over)
     cfg = ModelConfig(**kw)
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
@@ -122,3 +123,167 @@ def test_engine_eos_early_stop():
     eng.submit(Request(uid=0, prompt=prompt, max_new=8, eos_id=first))
     done = eng.run()
     assert done[0].output == [first]
+    assert done[0].finish_reason == "stop"
+
+
+# ------------------------------------------------------- stop machinery
+def test_stop_token_ids_via_params():
+    """SamplingParams.stop_token_ids behaves like eos: the stop token is
+    emitted, then the request finishes with reason "stop"."""
+    from repro.serving.sampling import SamplingParams
+
+    model, params = build()
+    rng = np.random.default_rng(5)
+    prompt = rng.integers(0, 64, size=7).astype(np.int32)
+    ref = isolated_greedy(model, params, prompt, 6)
+    stop_tok = ref[3]
+    eng = Engine(model, params, slots=1, max_len=64)
+    eng.submit(Request(uid=0, prompt=prompt,
+                       params=SamplingParams(max_new=10,
+                                             stop_token_ids=(stop_tok,))))
+    done = eng.run()
+    cut = ref.index(stop_tok) + 1
+    assert done[0].output == ref[:cut]
+    assert done[0].finish_reason == "stop"
+
+
+@pytest.mark.parametrize("layout", ["dense", "paged"])
+def test_stop_sequence_multi_token(layout):
+    """A multi-token stop sequence fires only when the full suffix
+    matches; matched tokens stay in the output."""
+    from repro.serving.sampling import SamplingParams
+
+    model, params = build()
+    rng = np.random.default_rng(6)
+    prompt = rng.integers(0, 64, size=9).astype(np.int32)
+    ref = isolated_greedy(model, params, prompt, 8)
+    seq = tuple(ref[2:4])
+    # expected stop point: the FIRST prefix of ref whose suffix is the
+    # full sequence (an untrained model may repeat tokens, so the pair
+    # can complete earlier than index 3 — the stop rule, not a hardcoded
+    # position, defines the truth)
+    want = ref
+    for n in range(len(seq), len(ref) + 1):
+        if tuple(ref[n - len(seq):n]) == seq:
+            want = ref[:n]
+            break
+    eng = Engine(model, params, slots=2, max_len=64, cache_layout=layout,
+                 page_size=8)
+    eng.submit(Request(uid=0, prompt=prompt,
+                       params=SamplingParams(max_new=8,
+                                             stop_sequences=(seq,))))
+    # a second request must be unaffected by its neighbor stopping
+    other = rng.integers(0, 64, size=5).astype(np.int32)
+    eng.submit(Request(uid=1, prompt=other,
+                       params=SamplingParams(max_new=6)))
+    done = {r.uid: r for r in eng.run()}
+    # stops exactly at the first FULL suffix match (a partial, single-
+    # token overlap must not fire), matched tokens kept in the output
+    assert done[0].output == want
+    assert done[0].finish_reason == "stop"
+    assert done[1].output == isolated_greedy(model, params, other, 6)
+
+
+def test_stop_on_first_token_mid_chunked_prefill():
+    """A request whose FIRST generated token (emitted as its chunked
+    prefill completes, mid-stream between other requests' decode steps)
+    is a stop token finishes without ever entering lockstep decode."""
+    from repro.serving.sampling import SamplingParams
+
+    model, params = build()
+    rng = np.random.default_rng(7)
+    prompt = rng.integers(0, 64, size=21).astype(np.int32)
+    first = isolated_greedy(model, params, prompt, 1)[0]
+    eng = Engine(model, params, slots=2, max_len=64, cache_layout="paged",
+                 page_size=8, prefill_chunk=8)
+    # keep a long-running decode in flight so the chunks interleave
+    other = rng.integers(0, 64, size=4).astype(np.int32)
+    eng.submit(Request(uid=1, prompt=other,
+                       params=SamplingParams(max_new=12)))
+    eng.submit(Request(uid=0, prompt=prompt,
+                       params=SamplingParams(max_new=8,
+                                             stop_token_ids=(first,))))
+    done = {r.uid: r for r in eng.run()}
+    assert done[0].output == [first]
+    assert done[0].finish_reason == "stop"
+    assert done[1].output == isolated_greedy(model, params, other, 12)
+
+
+def test_params_without_max_new_inherits_request_budget():
+    """Attaching sampling intent to a legacy request must not silently
+    replace its explicit max_new (params.max_new=None inherits it)."""
+    from repro.serving.sampling import SamplingParams
+
+    model, params = build()
+    rng = np.random.default_rng(10)
+    prompt = rng.integers(0, 64, size=6).astype(np.int32)
+    eng = Engine(model, params, slots=1, max_len=64)
+    eng.submit(Request(uid=0, prompt=prompt, max_new=4,
+                       params=SamplingParams(temperature=0.8, seed=1)))
+    done = eng.run()
+    assert len(done[0].output) == 4
+    # an explicit params.max_new still wins over the legacy field
+    eng.submit(Request(uid=1, prompt=prompt, max_new=4,
+                       params=SamplingParams(max_new=7)))
+    done = eng.run()
+    assert len(done[-1].output) == 7
+
+
+def test_eos_minus_one_never_stops():
+    """eos_id=-1 (and no stop params) keeps the legacy never-stop
+    semantics: the request always runs out its max_new budget."""
+    model, params = build()
+    rng = np.random.default_rng(8)
+    prompt = rng.integers(0, 64, size=6).astype(np.int32)
+    eng = Engine(model, params, slots=1, max_len=64)
+    eng.submit(Request(uid=0, prompt=prompt, max_new=10, eos_id=-1))
+    done = eng.run()
+    assert len(done[0].output) == 10
+    assert done[0].finish_reason == "length"
+
+
+def test_cancel_queued_request_by_identity():
+    """Engine.cancel must match by object identity: dataclass equality
+    tuple-compares the numpy prompt field and raises on same-shape
+    prompts (regression — uid reuse is common for raw-Engine callers)."""
+    model, params = build()
+    p = np.ones(6, np.int32)
+    eng = Engine(model, params, slots=1, max_len=64)
+    r1 = Request(uid=0, prompt=p.copy(), max_new=4)
+    r2 = Request(uid=0, prompt=p.copy(), max_new=4)
+    eng.submit(r1)
+    eng.submit(r2)
+    eng.cancel(r2)
+    assert len(eng.queue) == 1 and eng.queue[0] is r1
+    assert r2.finish_reason == "cancelled" and r2.output is None
+    done = eng.run()
+    assert any(r is r2 for r in done)
+    r1_done = next(r for r in done if r is r1)
+    assert len(r1_done.output) == 4 and r1_done.finish_reason == "length"
+
+
+# ------------------------------------------- on-device selection regression
+@pytest.mark.parametrize("layout", ["dense", "paged"])
+def test_steady_state_step_single_bulk_transfer(layout, monkeypatch):
+    """Acceptance: the jitted decode step selects tokens on device —
+    a steady-state engine step performs exactly ONE bulk device->host
+    transfer (the explicit device_get of the sampled tokens/logprobs)
+    and NO implicit transfers (jax.transfer_guard("disallow") turns any
+    stray int(jnp...)/np.asarray/jnp constant into an error)."""
+    model, params = build()
+    rng = np.random.default_rng(9)
+    eng = Engine(model, params, slots=2, max_len=64, cache_layout=layout,
+                 page_size=8)
+    for i in range(2):   # fill every slot; queue empty => no admissions
+        eng.submit(Request(uid=i, prompt=rng.integers(0, 64, size=6)
+                           .astype(np.int32), max_new=40))
+    eng.step()           # admissions + first decode (compiles)
+    eng.step()           # warm steady state
+    calls = []
+    real_get = jax.device_get
+    monkeypatch.setattr(jax, "device_get",
+                        lambda x: calls.append(1) or real_get(x))
+    with jax.transfer_guard("disallow"):
+        n = eng.step()
+    assert n == 2
+    assert len(calls) == 1, f"expected 1 bulk transfer, saw {len(calls)}"
