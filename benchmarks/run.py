@@ -7,6 +7,9 @@
   serving_bench  — continuous-batching engine dense vs paged KV cache
                    (tokens/s, TTFT, ITL; asserts layout output parity and
                    the O(page) decode-write advantage)
+  train_bench    — distributed-Trainer smoke (tokens/s, step time, accum
+                   on/off; asserts one bulk host transfer per log interval
+                   under jax.transfer_guard)
   scaling        — projected v5e throughput per arch from the dry-run
                    roofline (requires experiments/dryrun; skipped if absent)
 
@@ -27,11 +30,13 @@ def main() -> None:
 
     from benchmarks import (
         data_bench, kernels_bench, scaling, serving_bench, throughput,
+        train_bench,
     )
 
     print("name,us_per_call,derived")
     failures = 0
-    for mod in (throughput, kernels_bench, data_bench, serving_bench, scaling):
+    for mod in (throughput, kernels_bench, data_bench, serving_bench,
+                train_bench, scaling):
         try:
             mod.run(report)
         except Exception:  # noqa: BLE001

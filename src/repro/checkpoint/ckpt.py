@@ -5,15 +5,24 @@ path; a ``manifest.json`` records the tree structure, shapes, dtypes and
 the saving step.  On restore, leaves are loaded lazily and (optionally)
 ``device_put`` against target shardings — so a checkpoint written on one
 mesh restores onto another (the resharding restore BioNeMo gets from
-Megatron dist-ckpt).
+Megatron dist-ckpt).  ``save_train_state`` / ``restore_train_state`` extend
+the scheme to the FULL training state: params + AdamW moments + optimizer
+step, plus a JSON sidecar (``extra.json``) for host-side state such as the
+data-iterator cursor — the pieces ``Trainer.resume_from`` needs for a
+bit-exact resume (tests/test_trainer_distributed.py).
+
+Non-numpy dtypes (bfloat16, float8_*) are stored as their raw bit pattern
+(an unsigned view) with the logical dtype recorded in the manifest, so
+``np.save`` never sees an ml_dtypes scalar type.
 """
 from __future__ import annotations
 
 import json
 import os
-from typing import Any, Dict, Optional
+from typing import Any, Dict, Optional, Tuple
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 
@@ -37,19 +46,29 @@ def _unflatten_into(skeleton: Any, values: Dict[str, Any], path=()):
     return values["/".join(path)]
 
 
+def _is_native(dtype: np.dtype) -> bool:
+    # ml_dtypes types (bfloat16, float8_*) report kind 'V' (void): np.save
+    # would store them as raw void records that np.load can't retype.
+    return dtype.kind in "biufc"
+
+
 def save(ckpt_dir: str, tree: Any, step: int = 0) -> None:
     os.makedirs(ckpt_dir, exist_ok=True)
     manifest = {"step": step, "leaves": {}}
     for path, leaf in _flatten(tree):
         key = "/".join(path)
         arr = np.asarray(jax.device_get(leaf))
-        fname = key.replace("/", "__") + ".npy"
-        np.save(os.path.join(ckpt_dir, fname), arr)
-        manifest["leaves"][key] = {
-            "file": fname,
+        meta = {
             "shape": list(arr.shape),
             "dtype": str(arr.dtype),
         }
+        if not _is_native(arr.dtype):
+            meta["bits"] = True  # stored as a raw uN bit-pattern view
+            arr = arr.view(np.dtype(f"u{arr.dtype.itemsize}"))
+        fname = key.replace("/", "__") + ".npy"
+        np.save(os.path.join(ckpt_dir, fname), arr)
+        meta["file"] = fname
+        manifest["leaves"][key] = meta
     with open(os.path.join(ckpt_dir, "manifest.json"), "w") as f:
         json.dump(manifest, f, indent=1)
 
@@ -67,9 +86,54 @@ def restore(
         shard_map = {"/".join(p): s for p, s in _flatten(shardings)}
     for key, meta in manifest["leaves"].items():
         arr = np.load(os.path.join(ckpt_dir, meta["file"]))
+        if meta.get("bits"):
+            arr = arr.view(getattr(jnp, meta["dtype"]))
         sh = shard_map.get(key)
         values[key] = jax.device_put(arr, sh) if sh is not None else arr
     return _unflatten_into(skeleton, values)
+
+
+# ------------------------------------------------------- full train state
+def save_train_state(
+    ckpt_dir: str, state: Any, step: int, *, extra: Optional[Dict] = None
+) -> None:
+    """Full-state checkpoint: params + AdamW moments + optimizer step in
+    the leaf-per-file layout, with ``extra`` (JSON-serializable host state,
+    e.g. the data-iterator cursor) riding alongside in ``extra.json``."""
+    save(ckpt_dir, {"params": state.params, "opt": state.opt}, step)
+    if extra is not None:
+        with open(os.path.join(ckpt_dir, "extra.json"), "w") as f:
+            json.dump(extra, f)
+
+
+def restore_train_state(
+    ckpt_dir: str,
+    abstract_state: Any,
+    shardings: Optional[Any] = None,
+) -> Tuple[Any, int, Dict]:
+    """Restore a full TrainState; returns ``(state, step, extra)``.
+
+    ``abstract_state`` comes from ``train_step.abstract_train_state(model)``;
+    ``shardings`` (a TrainState of NamedShardings, e.g.
+    ``train_step.state_shardings(model)``) makes the restore sharding-aware:
+    every leaf is ``device_put`` against its target sharding, so a
+    checkpoint written on one mesh shape restores onto another.
+    """
+    skel = {"params": abstract_state.params, "opt": abstract_state.opt}
+    sh = None
+    if shardings is not None:
+        sh = {"params": shardings.params, "opt": shardings.opt}
+    tree = restore(ckpt_dir, skel, sh)
+    with open(os.path.join(ckpt_dir, "manifest.json")) as f:
+        step = int(json.load(f)["step"])
+    extra: Dict = {}
+    ep = os.path.join(ckpt_dir, "extra.json")
+    if os.path.exists(ep):
+        with open(ep) as f:
+            extra = json.load(f)
+    from repro.training.train_step import TrainState  # lazy: no import cycle
+
+    return TrainState(tree["params"], tree["opt"]), step, extra
 
 
 def latest_step(ckpt_root: str) -> Optional[str]:

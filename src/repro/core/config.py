@@ -207,6 +207,11 @@ class ParallelConfig:
 class TrainConfig:
     global_batch: int = 256
     seq_len: int = 4096
+    # microbatch gradient accumulation: each optimizer step scans
+    # accum_steps microbatches of global_batch/accum_steps rows with fp32
+    # grad accumulators; accum_steps=N is numerically equivalent to one
+    # N×-larger batch (token-weighted — see training/train_step.py)
+    accum_steps: int = 1
     learning_rate: float = 1e-3
     min_lr: float = 1e-5
     weight_decay: float = 0.01

@@ -52,5 +52,20 @@ class Policy:
         return x.astype(self.rdt)
 
 
+def compute_view(policy: Policy, params):
+    """Compute-dtype view of the master params (Megatron bf16 recipe).
+
+    The trainer keeps the fp32 master copy in ``TrainState`` (the optimizer
+    updates it in full precision) and casts the whole tree to the compute
+    dtype ONCE per step before the forward pass; ``jax.grad`` through the
+    cast accumulates gradients back in the master dtype.  No-op when the
+    two dtypes coincide (CPU fp32 unit tests), so numerics are unchanged
+    off the mixed-precision path.
+    """
+    if policy.pdt == policy.cdt:
+        return params
+    return policy.cast_compute(params)
+
+
 def policy_for(model_cfg) -> Policy:
     return Policy(param_dtype=model_cfg.param_dtype, compute_dtype=model_cfg.dtype)

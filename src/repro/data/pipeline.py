@@ -60,6 +60,20 @@ class MLMBatches:
         self.batch, self.seq_len, self.mask_prob = batch, seq_len, mask_prob
         self.rng = np.random.default_rng(seed)
 
+    def state_dict(self) -> Dict:
+        """Resumable cursor (JSON-serializable): the numpy Generator state
+        (+ sampler state).  Checkpointed by the Trainer so a resumed run
+        draws the exact batch sequence the interrupted run would have."""
+        st: Dict = {"rng": self.rng.bit_generator.state}
+        if self.sampler is not None:
+            st["sampler"] = self.sampler.state_dict()
+        return st
+
+    def load_state_dict(self, st: Dict) -> None:
+        self.rng.bit_generator.state = st["rng"]
+        if self.sampler is not None and "sampler" in st:
+            self.sampler.load_state_dict(st["sampler"])
+
     def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
         L = self.seq_len
         while True:
@@ -85,6 +99,17 @@ class CLMBatches:
         self.ds, self.batch, self.seq_len = ds, batch, seq_len
         self.rng = np.random.default_rng(seed)
         self._buf = np.empty((0,), np.int32)
+
+    def state_dict(self) -> Dict:
+        """Resumable cursor: Generator state + the packing carry buffer."""
+        return {
+            "rng": self.rng.bit_generator.state,
+            "buf": np.asarray(self._buf, np.int32).tolist(),
+        }
+
+    def load_state_dict(self, st: Dict) -> None:
+        self.rng.bit_generator.state = st["rng"]
+        self._buf = np.asarray(st["buf"], np.int32)
 
     def _fill(self, need: int):
         chunks = [self._buf]

@@ -20,6 +20,13 @@ class ClusterSampler:
         assert all(len(m) > 0 for m in self.members), "empty cluster"
         self.rng = np.random.default_rng(seed)
 
+    def state_dict(self) -> Dict:
+        """Resumable cursor (JSON-serializable Generator state)."""
+        return {"rng": self.rng.bit_generator.state}
+
+    def load_state_dict(self, st: Dict) -> None:
+        self.rng.bit_generator.state = st["rng"]
+
     def sample(self, n: int) -> np.ndarray:
         cl = self.rng.integers(0, len(self.members), size=n)
         return np.array(

@@ -8,6 +8,12 @@ this module never touches jax device state.  Shapes:
 
 The `model` axis stays intra-pod (ICI); `pod` carries only data-parallel
 gradient all-reduce (+ optional FSDP, see ParallelConfig.fsdp_axes).
+
+For CPU development the same mesh machinery runs against simulated host
+devices (``XLA_FLAGS=--xla_force_host_platform_device_count=8``):
+``make_test_mesh`` is the 8-device integration-test shape, and
+``launch/train.py --mesh DxM`` builds arbitrary (data, model) shapes for
+the distributed Trainer (tests/test_trainer_distributed.py).
 """
 from __future__ import annotations
 

@@ -1,49 +1,80 @@
 """End-to-end training launcher.
 
     PYTHONPATH=src python -m repro.launch.train --arch esm2-650m \
-        --steps 200 --batch 8 --seq 128 [--smoke]
+        --steps 200 --batch 8 --seq 128 [--smoke] [--accum 4] \
+        [--mesh auto|none|DxM] [--resume auto|<ckpt_dir>]
 
 On this CPU container ``--smoke`` (reduced config) is the practical mode;
-the same launcher drives the full config on a real TPU mesh (it constructs
-the production mesh when >1 device is available).
+the same launcher drives the full config on a real TPU mesh.  When more
+than one device is present (a real mesh, or CPU simulation via
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``) the launcher
+constructs a (data, model) mesh and the Trainer runs the sharded train
+step; ``--mesh 4x2`` pins the shape explicitly, ``--mesh none`` forces the
+single-device path.
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 
 import jax
 import numpy as np
 
+from repro.checkpoint import ckpt
 from repro.configs import get_config, get_smoke_config
 from repro.core.config import ParallelConfig, TrainConfig
 from repro.data.dataset import MemmapTokenDataset, build_synthetic_protein_memmap
 from repro.data.pipeline import CLMBatches, MLMBatches
 from repro.data.sampler import ClusterSampler, greedy_length_clusters
 from repro.models.model import build_model
-from repro.training.loop import run_training
+from repro.training.loop import Trainer
+
+
+class Seq2SeqBatches:
+    """CLM packing with a ``src_tokens`` mirror (enc-dec archs), delegating
+    the resume cursor to the underlying pipeline."""
+
+    def __init__(self, base: CLMBatches):
+        self.base = base
+
+    def state_dict(self):
+        return self.base.state_dict()
+
+    def load_state_dict(self, st):
+        self.base.load_state_dict(st)
+
+    def __iter__(self):
+        for b in self.base:
+            b = dict(b)
+            b["src_tokens"] = b["tokens"]
+            yield b
 
 
 def make_batches(cfg, tc: TrainConfig, data_dir: str, seed: int = 0):
+    """Returns the pipeline OBJECT (not an iterator) so the Trainer can
+    checkpoint/restore its cursor (``state_dict``/``load_state_dict``)."""
     ds, tok = build_synthetic_protein_memmap(f"{data_dir}/protein", n=2000, seed=seed)
     if cfg.objective == "mlm":
         lengths = [len(ds[i]) for i in range(len(ds))]
         sampler = ClusterSampler(greedy_length_clusters(lengths, 64), seed=seed)
-        return iter(
-            MLMBatches(ds, tok, sampler, tc.global_batch, tc.seq_len,
-                       cfg.mlm_mask_prob, seed)
-        )
+        return MLMBatches(ds, tok, sampler, tc.global_batch, tc.seq_len,
+                          cfg.mlm_mask_prob, seed)
     if cfg.is_encoder_decoder:
-        base = iter(CLMBatches(ds, tc.global_batch, tc.seq_len, seed))
+        return Seq2SeqBatches(CLMBatches(ds, tc.global_batch, tc.seq_len, seed))
+    return CLMBatches(ds, tc.global_batch, tc.seq_len, seed)
 
-        def gen():
-            for b in base:
-                b = dict(b)
-                b["src_tokens"] = b["tokens"]
-                yield b
 
-        return gen()
-    return iter(CLMBatches(ds, tc.global_batch, tc.seq_len, seed))
+def build_mesh(spec: str):
+    """"auto" = (n_devices, 1) data-parallel mesh when >1 device is
+    visible; "none" = single-device; "DxM" = explicit (data, model)."""
+    n = jax.device_count()
+    if spec == "none":
+        return None
+    if spec == "auto":
+        return jax.make_mesh((n, 1), ("data", "model")) if n > 1 else None
+    d, m = (int(x) for x in spec.lower().split("x"))
+    return jax.make_mesh((d, m), ("data", "model"))
 
 
 def main() -> None:
@@ -53,28 +84,59 @@ def main() -> None:
     p.add_argument("--batch", type=int, default=8)
     p.add_argument("--seq", type=int, default=128)
     p.add_argument("--lr", type=float, default=1e-3)
+    p.add_argument("--warmup", type=int, default=0,
+                   help="warmup steps (0 = steps//10)")
+    p.add_argument("--accum", type=int, default=1,
+                   help="gradient-accumulation microbatches per step")
+    p.add_argument("--mesh", default="auto",
+                   help="auto | none | DxM, e.g. 4x2 = (data=4, model=2)")
     p.add_argument("--smoke", action="store_true", help="reduced config")
     p.add_argument("--data-dir", default="/tmp/repro_data")
     p.add_argument("--ckpt-dir", default="")
+    p.add_argument("--ckpt-every", type=int, default=0,
+                   help="checkpoint period in steps (0 = final-only when "
+                        "--ckpt-dir is set)")
+    p.add_argument("--resume", default="",
+                   help="checkpoint dir to resume from, or 'auto' = latest "
+                        "step_* under --ckpt-dir")
     p.add_argument("--history-out", default="")
     a = p.parse_args()
 
     cfg = get_smoke_config(a.arch) if a.smoke else get_config(a.arch)
     tc = TrainConfig(
         global_batch=a.batch, seq_len=a.seq, learning_rate=a.lr,
-        total_steps=a.steps, warmup_steps=max(a.steps // 10, 1),
+        accum_steps=a.accum,
+        total_steps=a.steps,
+        warmup_steps=a.warmup or max(a.steps // 10, 1),
         decay_steps=max(a.steps // 10, 1),
-        ckpt_dir=a.ckpt_dir, ckpt_every=a.steps if a.ckpt_dir else 0,
+        ckpt_dir=a.ckpt_dir,
+        ckpt_every=a.ckpt_every or (a.steps if a.ckpt_dir else 0),
     )
-    mesh = None  # single-device CPU; on TPU: make_production_mesh()
+    print("resolved TrainConfig:")
+    print(json.dumps(dataclasses.asdict(tc), indent=1))
+    mesh = build_mesh(a.mesh)
     model = build_model(cfg, ParallelConfig(), mesh)
-    print(f"arch={cfg.name} params(analytic)={cfg.param_count():,}")
+    print(
+        f"arch={cfg.name} params(analytic)={cfg.param_count():,} "
+        f"mesh={dict(zip(mesh.axis_names, mesh.devices.shape)) if mesh else None}"
+    )
     batches = make_batches(cfg, tc, a.data_dir)
-    state, history = run_training(model, tc, batches)
+    resume = a.resume
+    if resume == "auto":
+        resume = ckpt.latest_step(a.ckpt_dir) or ""
+        print(f"resume: {resume or '(no checkpoint found — cold start)'}")
+    trainer = Trainer(model, tc)
+    state, history = trainer.run(batches, resume_from=resume or None)
     if a.history_out:
         with open(a.history_out, "w") as f:
             json.dump(history, f, indent=1)
-    print(f"final loss {history[-1]['loss']:.4f} (from {history[0]['loss']:.4f})")
+    if history:
+        print(
+            f"final loss {history[-1]['loss']:.4f} "
+            f"(from {history[0]['loss']:.4f})  "
+            f"{history[-1]['tokens_per_sec']:.0f} tok/s  "
+            f"tokens_seen={history[-1]['tokens_seen']:.0f}"
+        )
 
 
 if __name__ == "__main__":

@@ -4,6 +4,18 @@ The mesh has axes (``data``, ``model``) on one pod and (``pod``, ``data``,
 ``model``) across pods.  Models annotate params/activations with *logical*
 axis names; this module maps them onto mesh axes per :class:`ParallelConfig`.
 
+Consumers of these rules span both halves of the system:
+
+  * training — ``training/train_step.make_sharded_train_step`` turns
+    ``train_state_specs(model)`` (built from ``spec_tree`` over these
+    rules) into the jit in/out shardings of the distributed train step,
+    and ``training/loop.Trainer`` places host batches on the ``data``
+    axes via ``host_batch_sharding``; parity with the single-device run
+    is asserted in tests/test_trainer_distributed.py (8-virtual-device
+    CPU mesh) and tests/test_parallel_numerics.py.
+  * serving / dry-run — ``launch/shapes.dryrun_bundle`` shards the
+    prefill/decode entry points for the 256/512-chip compile-only sweep.
+
 Weight storage convention (uniform across archs — see DESIGN.md §5):
   * every large 2-D weight is stored (fsdp-dim, tp-dim) — combined FSDP+TP,
     ZeRO-3-like.  GSPMD inserts the all-gathers at use sites.

@@ -1,19 +1,27 @@
 """Train/serve step builders: loss + grad + clip + AdamW, with shardings.
 
-``make_train_step`` returns (step_fn, in_shardings, out_shardings) ready for
-``jax.jit`` — the same builder serves CPU unit tests (mesh=None) and the
-256/512-chip dry-run (mesh=production).
+``make_train_step`` builds the raw ``step_fn(state, batch)`` — including
+microbatch gradient accumulation (``TrainConfig.accum_steps``) and the
+mixed-precision policy (bf16 compute params cast once per step from the
+fp32 master copy held in ``TrainState``; see ``core/precision.compute_view``).
+
+``make_sharded_train_step`` is the distributed entry point: it consumes
+``train_state_specs(model)`` / the model's ``ShardingCtx`` and returns
+``jit(step_fn, in_shardings=…, out_shardings=…, donate_argnums=…)`` — the
+same builder serves CPU unit tests (mesh=None), the 8-virtual-device CPU
+mesh (``--xla_force_host_platform_device_count=8``) and the 256/512-chip
+production mesh.  ``training/loop.Trainer`` drives it end-to-end.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec
 
 from repro.core.config import ModelConfig, ParallelConfig, TrainConfig
-from repro.core.precision import dtype_of
+from repro.core.precision import compute_view, dtype_of
 from repro.models.model import Model, build_model
 from repro.optim import adamw
 from repro.optim.schedule import lr_at
@@ -62,22 +70,146 @@ def train_state_specs(model: Model) -> TrainState:
     return TrainState(pspecs, adamw.state_specs(pspecs))
 
 
+def state_shardings(model: Model) -> TrainState:
+    """``train_state_specs`` mapped onto the model's mesh as NamedShardings
+    (the checkpoint-restore / device_put / jit in_shardings currency)."""
+    mesh = model.ctx.mesh
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), train_state_specs(model)
+    )
+
+
+def host_batch_sharding(model: Model) -> NamedSharding:
+    """Pytree-prefix sharding for any host batch dict: the leading (batch)
+    dim of every leaf lands on the mesh's data axes, the rest replicated."""
+    return NamedSharding(
+        model.ctx.mesh, PartitionSpec(model.ctx.rules.get("batch"))
+    )
+
+
+def _split_micro(batch: Dict[str, jax.Array], accum: int):
+    """(B, …) -> (accum, B/accum, …) microbatch stack for lax.scan."""
+
+    def sp(x):
+        if x.shape[0] % accum:
+            raise ValueError(
+                f"global batch {x.shape[0]} not divisible by "
+                f"accum_steps {accum}"
+            )
+        return x.reshape(accum, x.shape[0] // accum, *x.shape[1:])
+
+    return jax.tree.map(sp, batch)
+
+
 def make_train_step(model: Model, tc: TrainConfig):
-    """Returns step_fn(state, batch) -> (state, metrics)."""
+    """Returns step_fn(state, batch) -> (state, metrics).
+
+    * Mixed precision: the forward/backward runs on a compute-dtype view of
+      the master params (``compute_view``); gradients land back in the
+      master dtype and AdamW updates the fp32 copy.
+    * Gradient accumulation: ``tc.accum_steps > 1`` scans microbatches with
+      fp32 grad accumulators, weighting each microbatch gradient by its
+      token count, so ``accum=N`` matches one N×-larger batch exactly for
+      the masked-mean CE loss (MLM microbatches mask different token
+      counts); the MoE aux term is token-weighted too, which coincides with
+      the large-batch value when microbatch token counts are equal.
+    """
+    accum = max(int(tc.accum_steps), 1)
+    policy = model.policy
+
+    def loss_and_grads(params, mb):
+        def loss_of(p):
+            return model.loss_fn(compute_view(policy, p), mb)
+
+        return jax.value_and_grad(loss_of, has_aux=True)(params)
 
     def step_fn(state: TrainState, batch: Dict[str, jax.Array]):
-        def loss_of(params):
-            return model.loss_fn(params, batch)
+        params = state.params
+        if accum == 1:
+            (loss, metrics), grads = loss_and_grads(params, batch)
+            metrics = dict(metrics)
+            metrics["loss"] = loss
+        else:
+            micro = _split_micro(batch, accum)
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            init = (zeros, *([jnp.float32(0.0)] * 4))
 
-        (loss, metrics), grads = jax.value_and_grad(loss_of, has_aux=True)(state.params)
+            def one(carry, mb):
+                g_acc, l_acc, ce_acc, d_acc, a_acc = carry
+                (loss, m), grads = loss_and_grads(params, mb)
+                d = m["tokens"].astype(jnp.float32)
+                g_acc = jax.tree.map(
+                    lambda a, g: a + d * g.astype(jnp.float32), g_acc, grads
+                )
+                return (
+                    g_acc,
+                    l_acc + d * loss,
+                    ce_acc + d * m["ce_loss"],
+                    d_acc + d,
+                    a_acc + m["aux_loss"] / accum,
+                ), None
+
+            (g_acc, l_acc, ce_acc, d_acc, a_acc), _ = jax.lax.scan(
+                one, init, micro
+            )
+            grads = jax.tree.map(
+                lambda g, p: (g / d_acc).astype(p.dtype), g_acc, params
+            )
+            metrics = {
+                "loss": l_acc / d_acc,
+                "ce_loss": ce_acc / d_acc,
+                "aux_loss": a_acc,
+                "tokens": d_acc,
+            }
         grads, gnorm = adamw.clip_by_global_norm(grads, tc.grad_clip)
         lr = lr_at(tc, state.opt.step + 1)  # first update uses step 1 (warmup>0)
-        params, opt = adamw.apply_updates(state.params, grads, state.opt, lr, tc)
-        metrics = dict(metrics)
-        metrics.update(loss=loss, grad_norm=gnorm, lr=lr)
+        params, opt = adamw.apply_updates(params, grads, state.opt, lr, tc)
+        metrics.update(grad_norm=gnorm, lr=lr)
         return TrainState(params, opt), metrics
 
     return step_fn
+
+
+def make_sharded_train_step(model: Model, tc: TrainConfig):
+    """The distributed train step: ``make_train_step`` jitted against the
+    model's mesh with state/batch in_shardings, state out_shardings and a
+    donated input state.  Off-mesh (mesh=None or a 1-device mesh) it
+    degrades to a plain donated jit, so the same builder runs everywhere.
+    """
+    step_fn = make_train_step(model, tc)
+    donate = (0,) if model.ctx.pc.donate_params else ()
+    mesh = model.ctx.mesh
+    if mesh is None or mesh.empty or mesh.size == 1:
+        return jax.jit(step_fn, donate_argnums=donate)
+    state_sh = state_shardings(model)
+    batch_sh = host_batch_sharding(model)
+    metrics_sh = NamedSharding(mesh, PartitionSpec())
+    return jax.jit(
+        step_fn,
+        in_shardings=(state_sh, batch_sh),
+        out_shardings=(state_sh, metrics_sh),
+        donate_argnums=donate,
+    )
+
+
+def init_sharded_train_state(model: Model, key, tc: TrainConfig) -> TrainState:
+    """Initialize the TrainState, then place it onto its mesh shardings.
+
+    Init runs un-sharded on the default device so the draws are identical
+    to the single-device reference regardless of mesh shape (legacy
+    non-partitionable threefry changes values when the RNG computation is
+    partitioned); ``device_put`` then scatters the leaves.  At true
+    3B-on-256-chips scale, enable ``jax_threefry_partitionable`` and jit
+    the init with ``out_shardings=state_shardings(model)`` instead so
+    params materialize pre-sharded.
+    """
+    state = init_train_state(model, key, tc)
+    mesh = model.ctx.mesh
+    if mesh is None or mesh.empty or mesh.size == 1:
+        return state
+    return jax.device_put(state, state_shardings(model))
 
 
 def make_eval_step(model: Model):

@@ -87,6 +87,22 @@ def test_checkpoint_restore_with_shardings(tmp_path):
     assert restored["nest"]["b"].sharding == shardings["nest"]["b"]
 
 
+def test_checkpoint_bfloat16_bit_pattern(tmp_path):
+    """ml_dtypes leaves (kind 'V') are stored as raw bit patterns and
+    restored to the logical dtype bit-exactly (np.save can't round-trip
+    them natively)."""
+    from repro.checkpoint import ckpt
+
+    tree = {"w": jnp.array([1.5, -2.25, 3.0], jnp.bfloat16)}
+    ckpt.save(str(tmp_path / "c"), tree, step=1)
+    restored = ckpt.restore(str(tmp_path / "c"), tree)
+    assert restored["w"].dtype == np.dtype(jnp.bfloat16)
+    np.testing.assert_array_equal(
+        np.asarray(restored["w"]).view(np.uint16),
+        np.asarray(tree["w"]).view(np.uint16),
+    )
+
+
 def test_checkpoint_latest_step(tmp_path):
     from repro.checkpoint import ckpt
 
