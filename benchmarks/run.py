@@ -5,8 +5,9 @@
   kernels_bench  — fused-kernel-semantics ops vs naive oracles
   data_bench     — bio data-pipeline throughput (cluster sampling, packing)
   serving_bench  — continuous-batching engine dense vs paged KV cache
-                   (tokens/s, TTFT, ITL; asserts layout output parity and
-                   the O(page) decode-write advantage)
+                   (tokens/s, TTFT, ITL; asserts layout output parity, the
+                   O(page) decode-write advantage, and the degraded-mode
+                   overload/chaos contract)
   train_bench    — distributed-Trainer smoke (tokens/s, step time, accum
                    on/off; asserts one bulk host transfer per log interval
                    under jax.transfer_guard)
@@ -14,14 +15,88 @@
                    roofline (requires experiments/dryrun; skipped if absent)
 
 Prints ``name,us_per_call,derived`` CSV.
+
+Trajectory files: after a clean run, the serving rows (``serving/...``)
+and train rows (``train_step...``) are APPENDED as one timestamped record
+each to ``BENCH_serving.json`` / ``BENCH_train.json`` at the repo root, so
+perf over time survives re-anchors and is diffable in review.  Records
+carry the short git rev; the write is tmp-file + ``os.replace`` atomic
+(same discipline as ``checkpoint/ckpt.py``).  ``--modules`` runs a subset
+(e.g. ``--modules serving_bench,train_bench`` refreshes both trajectories
+without the full suite); ``--no-json`` skips the append for scratch runs.
 """
 from __future__ import annotations
 
+import argparse
+import json
+import os
+import subprocess
 import sys
+import time
 import traceback
+
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# trajectory file -> predicate over row names.  train_bench rows are named
+# ``train_step_accum{N}`` (no prefix); everything serving-side is
+# ``serving/...``.
+_TRAJECTORIES = {
+    "BENCH_serving.json": lambda name: name.startswith("serving/"),
+    "BENCH_train.json": lambda name: name.startswith("train_step"),
+}
+
+
+def _git_rev() -> str:
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            cwd=_REPO_ROOT, capture_output=True, text=True, timeout=10,
+        )
+        return out.stdout.strip() or "unknown"
+    except Exception:  # noqa: BLE001 — bench must not die on a bare checkout
+        return "unknown"
+
+
+def append_trajectories(rows, out_dir: str = _REPO_ROOT) -> None:
+    """Append one record per trajectory file for this run's rows."""
+    stamp = time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime())
+    rev = _git_rev()
+    for fname, match in _TRAJECTORIES.items():
+        sel = [
+            {"name": n, "us": round(us, 1), "derived": d}
+            for n, us, d in rows if match(n)
+        ]
+        if not sel:
+            continue  # subset run: don't append empty records
+        path = os.path.join(out_dir, fname)
+        try:
+            with open(path) as f:
+                runs = json.load(f)["runs"]
+        except (OSError, ValueError, KeyError):
+            runs = []
+        runs.append({"timestamp": stamp, "git": rev, "rows": sel})
+        tmp = f"{path}.tmp.{os.getpid()}"
+        with open(tmp, "w") as f:
+            json.dump({"runs": runs}, f, indent=1)
+            f.write("\n")
+        os.replace(tmp, path)
+        print(f"# appended {len(sel)} rows to {fname} ({len(runs)} runs)",
+              file=sys.stderr)
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument(
+        "--modules", default="",
+        help="comma-separated subset of bench modules to run "
+             "(default: all)",
+    )
+    ap.add_argument(
+        "--no-json", action="store_true",
+        help="skip the BENCH_*.json trajectory append",
+    )
+    args = ap.parse_args()
+
     rows = []
 
     def report(name: str, us: float, derived: str = "") -> None:
@@ -33,10 +108,20 @@ def main() -> None:
         train_bench,
     )
 
+    mods = [throughput, kernels_bench, data_bench, serving_bench,
+            train_bench, scaling]
+    if args.modules:
+        want = {m.strip() for m in args.modules.split(",") if m.strip()}
+        known = {m.__name__.rsplit(".", 1)[-1] for m in mods}
+        unknown = want - known
+        if unknown:
+            ap.error(f"unknown modules: {sorted(unknown)} "
+                     f"(choose from {sorted(known)})")
+        mods = [m for m in mods if m.__name__.rsplit(".", 1)[-1] in want]
+
     print("name,us_per_call,derived")
     failures = 0
-    for mod in (throughput, kernels_bench, data_bench, serving_bench,
-                train_bench, scaling):
+    for mod in mods:
         try:
             mod.run(report)
         except Exception:  # noqa: BLE001
@@ -45,6 +130,10 @@ def main() -> None:
             traceback.print_exc()
     if not rows or failures:
         sys.exit(1)
+    # only clean runs enter the trajectory — a failed module would record
+    # a partial row set that reads as a perf cliff
+    if not args.no_json:
+        append_trajectories(rows)
 
 
 if __name__ == "__main__":

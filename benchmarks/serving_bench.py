@@ -28,6 +28,14 @@ Four measurements:
     scatter (``ops.paged_kv_update``).  The paged write must win; this
     asserts the per-token write really is page-local, independent of the
     cache length.
+  * degraded-mode workload — a 3x-oversubscribed arrival pattern served
+    by an UNBOUNDED queue vs a bounded one (``max_queue``): the bounded
+    engine must reject some arrivals AND cut the p99 TTFT of the
+    accepted ones (rejections instead of unbounded queueing — the
+    fault-tolerance contract), with token parity on every accepted
+    request asserted against the unbounded run.  A seeded ``FaultPlan``
+    chaos pass (NaN injection + allocator outage) then must drain with
+    survivors token-identical to the fault-free engine.
 
 CPU numbers prove the mechanism (data volume per token write, prompt
 rows not recomputed); on TPU the same ratios show up as HBM traffic per
@@ -268,6 +276,107 @@ def run(report):
         f"paged decode write ({us_paged:.0f}us) should beat the O(B*T) "
         f"masked select ({us_dense:.0f}us) at T={T}"
     )
+
+    # ------------------------------------- degraded-mode workload
+    # The fault-tolerance contract under overload: 4 new requests arrive
+    # per engine step against 4 slots completing ~0.5 req/step (8x
+    # oversubscribed).  The unbounded engine queues every arrival, so the
+    # p99 TTFT of ACCEPTED requests grows with the backlog; the bounded
+    # engine (max_queue=6) converts the backlog into typed
+    # EngineOverloaded rejections the client can retry, keeping accepted
+    # p99 TTFT low.  Rejections instead of unbounded queueing — asserted,
+    # plus greedy token parity per accepted uid against the unbounded run
+    # (backpressure must not change what survivors generate).
+    from repro.serving.engine import EngineOverloaded, Request
+
+    over_prompts = [
+        rng.integers(5, cfg.vocab_size, size=int(rng.integers(6, 24)))
+        .astype(np.int32)
+        for _ in range(32)
+    ]
+
+    def _overload(max_queue):
+        eng = Engine(model, params, slots=4, max_len=64,
+                     cache_layout="paged", page_size=16,
+                     max_queue=max_queue)
+        _run_pass(eng, over_prompts[:4], 8)  # warm the jit caches
+        n_before = len(eng.done)
+        accepted, rejected = [], 0
+        pending = list(enumerate(over_prompts))
+        t0 = time.time()
+        while pending:
+            for _ in range(4):  # 4 arrivals per engine step
+                if not pending:
+                    break
+                i, p = pending.pop(0)
+                try:
+                    eng.submit(Request(uid=i, prompt=p, max_new=8))
+                    accepted.append(i)
+                except EngineOverloaded:
+                    rejected += 1
+            eng.step()
+        eng.run()
+        wall = time.time() - t0
+        done = {r.uid: r for r in eng.done[n_before:]}
+        assert sorted(done) == sorted(accepted), \
+            "overload pass lost accepted requests"
+        ttft_ms = np.asarray(
+            [done[u].t_first - done[u].t_submit for u in accepted]
+        ) * 1e3
+        p99 = float(np.percentile(ttft_ms, 99))
+        return {u: done[u].output for u in accepted}, p99, rejected, wall
+
+    outs_unb, p99_unb, rej_unb, _ = _overload(0)
+    outs_bnd, p99_bnd, rej_bnd, _ = _overload(6)
+    report("serving/overload_unbounded_p99ttft", p99_unb * 1e3,
+           f"accepted={len(outs_unb)}/32 rejected={rej_unb} "
+           "(every arrival queued)")
+    report("serving/overload_bounded_p99ttft", p99_bnd * 1e3,
+           f"accepted={len(outs_bnd)}/32 rejected={rej_bnd} max_queue=6 "
+           f"p99_cut={p99_unb / max(p99_bnd, 1e-9):.1f}x")
+    assert rej_unb == 0, "unbounded engine must not reject"
+    assert rej_bnd > 0, "bounded engine must shed load under 8x overload"
+    assert p99_bnd < p99_unb, (
+        f"bounded queue must cut accepted p99 TTFT under overload "
+        f"(unbounded {p99_unb:.1f}ms, bounded {p99_bnd:.1f}ms)"
+    )
+    for u, out in outs_bnd.items():
+        assert out == outs_unb[u], \
+            f"backpressure changed tokens for accepted request {u}"
+
+    # seeded chaos pass: NaN injection + an allocator outage from
+    # serving/faults.FaultPlan.  The engine must drain every request, and
+    # the non-quarantined survivors must be token-identical to a
+    # fault-free engine on the same workload (fault isolation: a poisoned
+    # slot never contaminates its batch neighbours).
+    from repro.serving.faults import FaultPlan
+
+    def _chaos(plan):
+        eng = Engine(model, params, slots=4, max_len=64,
+                     cache_layout="paged", page_size=16, faults=plan)
+        for i, p in enumerate(over_prompts[:8]):
+            eng.submit(Request(uid=i, prompt=p, max_new=8))
+        t0 = time.time()
+        eng.run()
+        return ({r.uid: r for r in eng.done}, dict(eng.counters),
+                time.time() - t0)
+
+    ref, _, _ = _chaos(None)
+    # seed 2 schedules a NaN at step 4 (all slots still active) plus a
+    # 4-step allocator outage, so the quarantine path provably fires
+    plan = FaultPlan.seeded(2, horizon=24, slots=4, nan_events=2, outages=1)
+    fau, counters, chaos_wall = _chaos(plan)
+    assert len(fau) == 8, "chaos engine failed to drain all requests"
+    assert counters["errors"] >= 1, \
+        "seeded plan must quarantine at least one slot"
+    survivors = [u for u, r in fau.items()
+                 if r.finish_reason in ("stop", "length")]
+    for u in survivors:
+        assert fau[u].output == ref[u].output, \
+            f"chaos survivor {u} diverged from fault-free run"
+    report("serving/chaos_seeded_drain", chaos_wall * 1e6,
+           f"errors={counters['errors']} survivors={len(survivors)}/8 "
+           "token-parity ok")
 
 
 if __name__ == "__main__":

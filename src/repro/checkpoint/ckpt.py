@@ -14,11 +14,21 @@ bit-exact resume (tests/test_trainer_distributed.py).
 Non-numpy dtypes (bfloat16, float8_*) are stored as their raw bit pattern
 (an unsigned view) with the logical dtype recorded in the manifest, so
 ``np.save`` never sees an ml_dtypes scalar type.
+
+Writes are ATOMIC at directory granularity: leaves land in a hidden
+sibling temp dir, ``manifest.json`` is written last (it doubles as the
+completeness sentinel), and the temp dir is ``os.replace``d into place.
+A crash mid-save leaves either the previous complete checkpoint or a
+hidden ``.*.tmp.*`` orphan — never a half-written ``step_N`` that
+``latest_step`` / ``--resume=auto`` could pick up; ``latest_step``
+additionally requires the sentinel, so even a pre-atomic partial dir is
+skipped rather than crashing the resume.
 """
 from __future__ import annotations
 
 import json
 import os
+import shutil
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -52,8 +62,26 @@ def _is_native(dtype: np.dtype) -> bool:
     return dtype.kind in "biufc"
 
 
-def save(ckpt_dir: str, tree: Any, step: int = 0) -> None:
-    os.makedirs(ckpt_dir, exist_ok=True)
+def save(ckpt_dir: str, tree: Any, step: int = 0, *,
+         extra_files: Optional[Dict[str, Any]] = None) -> None:
+    """Atomically write `tree` as a leaf-per-file checkpoint directory.
+
+    Everything is staged in a hidden temp dir next to the target
+    (``.{name}.tmp.{pid}`` — hidden so no directory listing pattern can
+    mistake it for a checkpoint), ``manifest.json`` is written LAST as
+    the completeness sentinel, and one ``os.replace`` publishes the
+    whole thing.  ``extra_files`` maps extra JSON sidecar names (e.g.
+    ``"extra.json"``) to serializable payloads that must land inside the
+    same atomic unit — writing them after the rename would reopen the
+    crash window the rename closed."""
+    parent = os.path.dirname(os.path.abspath(ckpt_dir))
+    os.makedirs(parent, exist_ok=True)
+    tmp = os.path.join(
+        parent, f".{os.path.basename(ckpt_dir)}.tmp.{os.getpid()}"
+    )
+    if os.path.isdir(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
     manifest = {"step": step, "leaves": {}}
     for path, leaf in _flatten(tree):
         key = "/".join(path)
@@ -66,11 +94,20 @@ def save(ckpt_dir: str, tree: Any, step: int = 0) -> None:
             meta["bits"] = True  # stored as a raw uN bit-pattern view
             arr = arr.view(np.dtype(f"u{arr.dtype.itemsize}"))
         fname = key.replace("/", "__") + ".npy"
-        np.save(os.path.join(ckpt_dir, fname), arr)
+        np.save(os.path.join(tmp, fname), arr)
         meta["file"] = fname
         manifest["leaves"][key] = meta
-    with open(os.path.join(ckpt_dir, "manifest.json"), "w") as f:
+    for name, payload in (extra_files or {}).items():
+        with open(os.path.join(tmp, name), "w") as f:
+            json.dump(payload, f)
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f, indent=1)
+    # os.replace only overwrites an existing EMPTY dir; drop a stale
+    # complete checkpoint of the same name first (worst case after a
+    # crash between these two lines: no step_N, previous steps intact)
+    if os.path.isdir(ckpt_dir):
+        shutil.rmtree(ckpt_dir)
+    os.replace(tmp, ckpt_dir)
 
 
 def restore(
@@ -99,11 +136,13 @@ def save_train_state(
 ) -> None:
     """Full-state checkpoint: params + AdamW moments + optimizer step in
     the leaf-per-file layout, with ``extra`` (JSON-serializable host state,
-    e.g. the data-iterator cursor) riding alongside in ``extra.json``."""
-    save(ckpt_dir, {"params": state.params, "opt": state.opt}, step)
-    if extra is not None:
-        with open(os.path.join(ckpt_dir, "extra.json"), "w") as f:
-            json.dump(extra, f)
+    e.g. the data-iterator cursor) riding alongside in ``extra.json`` —
+    inside the same atomic rename as the tensors, so a resume can never
+    see new params with a stale data cursor (or vice versa)."""
+    save(
+        ckpt_dir, {"params": state.params, "opt": state.opt}, step,
+        extra_files=({"extra.json": extra} if extra is not None else None),
+    )
 
 
 def restore_train_state(
@@ -137,9 +176,19 @@ def restore_train_state(
 
 
 def latest_step(ckpt_root: str) -> Optional[str]:
+    """Newest COMPLETE checkpoint dir under `ckpt_root`, or None.
+
+    Completeness = the ``manifest.json`` sentinel exists (it is written
+    last inside the atomic temp dir).  Hidden ``.*.tmp.*`` orphans from
+    a crashed save never match ``step_*``; a half-written legacy dir
+    without the sentinel is skipped instead of crashing the resume."""
     if not os.path.isdir(ckpt_root):
         return None
-    steps = [d for d in os.listdir(ckpt_root) if d.startswith("step_")]
+    steps = [
+        d for d in os.listdir(ckpt_root)
+        if d.startswith("step_")
+        and os.path.exists(os.path.join(ckpt_root, d, "manifest.json"))
+    ]
     if not steps:
         return None
     return os.path.join(ckpt_root, max(steps, key=lambda s: int(s.split("_")[1])))

@@ -227,6 +227,12 @@ class TrainConfig:
     log_every: int = 10
     ckpt_every: int = 0        # 0 = disabled
     ckpt_dir: str = ""
+    # non-finite guard (training/loop.py): a step whose loss or global
+    # grad-norm is non-finite applies NO update (params/opt state keep
+    # their old values, opt.step does not advance) and is counted in the
+    # metrics as a skip; this many CONSECUTIVE skips aborts the run with
+    # the offending step number instead of silently training on garbage
+    max_nonfinite_skips: int = 10
 
 
 @dataclass(frozen=True)
@@ -253,6 +259,18 @@ class ServeConfig:
     #   with decode iterations (0 = prefill the suffix in one chunk).
     prefix_cache: bool = False
     prefill_chunk: int = 0
+    # fault tolerance (serving/README.md "Failure semantics"):
+    #   max_queue — bounded admission queue; 0 = unbounded.  A full queue
+    #   rejects at submit with the typed retriable EngineOverloaded
+    #   instead of growing TTFT for everyone.
+    #   preempt — under page pressure, evict the newest in-flight decode
+    #   and replay it later (token-identical resume) instead of
+    #   head-of-line blocking the queue.  Paged layout only.
+    #   deadline_ms — default per-request wall-clock SLO from submit
+    #   (None = no deadline); individual SamplingParams override it.
+    max_queue: int = 0
+    preempt: bool = False
+    deadline_ms: Optional[float] = None
 
 
 def reduced(mc: ModelConfig, **over: Any) -> ModelConfig:

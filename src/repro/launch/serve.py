@@ -105,17 +105,19 @@ def serve_continuous(model, params, sc: ServeConfig, *, gen: int,
         prompts.append(prompt)
         plist.append(SamplingParams(
             temperature=sc.temperature, top_k=sc.top_k, top_p=sc.top_p,
-            seed=sc.seed + i, max_new=gen,
+            seed=sc.seed + i, max_new=gen, deadline_ms=sc.deadline_ms,
         ))
     t0 = time.time()
     outs = llm.generate(prompts, plist)
     wall = time.time() - t0
     eng = llm.engine
+    served = [c for c in outs if c.finish_reason in ("stop", "length")]
+    degraded = [c for c in outs if c.finish_reason not in ("stop", "length")]
     toks = sum(len(c.tokens) for c in outs)
-    ttft = float(np.mean([c.ttft_s for c in outs])) * 1e3
+    ttft = float(np.mean([c.ttft_s for c in served])) * 1e3 if served else 0.0
     itl = float(np.mean([
-        (c.latency_s - c.ttft_s) / max(len(c.tokens) - 1, 1) for c in outs
-    ])) * 1e3
+        (c.latency_s - c.ttft_s) / max(len(c.tokens) - 1, 1) for c in served
+    ])) * 1e3 if served else 0.0
     extra = ""
     if eng.alloc is not None and sc.prefix_cache:
         st = eng.alloc.stats
@@ -124,9 +126,22 @@ def serve_continuous(model, params, sc: ServeConfig, *, gen: int,
             f"{st['evictions']} evictions, {st['cow_copies']} COW copies"
         )
     print(
-        f"[{sc.cache_layout}] served {len(outs)} requests / {toks} tokens "
-        f"on {eng.B} slots: {toks / wall:.1f} tok/s, "
+        f"[{sc.cache_layout}] served {len(served)}/{len(outs)} requests / "
+        f"{toks} tokens on {eng.B} slots: {toks / wall:.1f} tok/s, "
         f"ttft {ttft:.1f}ms, itl {itl:.2f}ms{extra}"
+    )
+    if degraded:
+        by_reason: dict = {}
+        for c in degraded:
+            by_reason[c.finish_reason] = by_reason.get(c.finish_reason, 0) + 1
+        print("  degraded outcomes: "
+              + ", ".join(f"{k}={v}" for k, v in sorted(by_reason.items())))
+    h = eng.health()
+    print(
+        f"  health: steps={h.steps} queue={h.queue_depth} "
+        f"active={h.active_slots}/{h.slots} "
+        f"free_pages={h.free_pages}/{h.total_pages} "
+        f"stalled_steps={h.steps_since_progress} counters={h.counters}"
     )
 
 
@@ -155,6 +170,16 @@ def main() -> None:
     p.add_argument("--prefill-chunk", type=int, default=0,
                    help="bound prefill to N-token chunks interleaved with "
                         "decode steps (paged layout; 0 = one chunk)")
+    p.add_argument("--max-queue", type=int, default=0,
+                   help="bounded admission queue; overflow submits are "
+                        "rejected with a typed retriable error (0 = unbounded)")
+    p.add_argument("--preempt", action="store_true",
+                   help="under page pressure, preempt-and-requeue the newest "
+                        "in-flight decode instead of head-of-line blocking "
+                        "(paged layout; resumed output is token-identical)")
+    p.add_argument("--deadline-ms", type=float, default=None,
+                   help="default per-request deadline from submit; expired "
+                        "requests finish with finish_reason='timeout'")
     a = p.parse_args()
 
     cfg = get_smoke_config(a.arch) if a.smoke else get_config(a.arch)
@@ -168,6 +193,8 @@ def main() -> None:
             top_k=a.top_k, top_p=a.top_p, seed=a.seed,
             cache_layout=a.cache_layout, page_size=a.page_size,
             prefix_cache=a.prefix_cache, prefill_chunk=a.prefill_chunk,
+            max_queue=a.max_queue, preempt=a.preempt,
+            deadline_ms=a.deadline_ms,
         )
         serve_continuous(model, params, sc, gen=a.gen,
                          prompt_len=a.prompt_len, requests=a.requests)

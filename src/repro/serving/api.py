@@ -30,7 +30,7 @@ from typing import Any, Dict, Iterator, List, Optional, Sequence, Union
 import numpy as np
 
 from repro.core.config import ServeConfig
-from repro.serving.engine import Engine, Request
+from repro.serving.engine import Engine, EngineOverloaded, Request
 from repro.serving.sampling import SamplingParams
 
 ParamsArg = Union[None, SamplingParams, Sequence[Optional[SamplingParams]]]
@@ -38,13 +38,22 @@ ParamsArg = Union[None, SamplingParams, Sequence[Optional[SamplingParams]]]
 
 @dataclasses.dataclass
 class Completion:
-    """One finished request, in the order its prompt was passed in."""
+    """One finished request, in the order its prompt was passed in.
+
+    ``finish_reason`` extends beyond the happy path: ``"stop"`` /
+    ``"length"`` (normal), ``"timeout"`` (deadline passed — ``tokens``
+    holds whatever was produced, possibly nothing), ``"error"`` (the
+    request's logits went non-finite and its slot was quarantined), and
+    ``"overloaded"`` (rejected at submit by the engine's bounded queue —
+    the request never ran; retriable).  Degraded outcomes are data, not
+    exceptions: one saturated engine must not turn a whole batch call
+    into a stack trace."""
 
     index: int
     tokens: List[int]
-    finish_reason: str                    # "stop" | "length"
+    finish_reason: str
     logprobs: Optional[List[float]] = None
-    ttft_s: float = 0.0                   # submit -> first token
+    ttft_s: float = 0.0                   # submit -> first token (0 if none)
     latency_s: float = 0.0                # submit -> done
 
 
@@ -71,6 +80,8 @@ class LLM:
                  cache_layout: str = "dense", page_size: int = 16,
                  num_pages: int = 0, bucket_prompts: Optional[bool] = None,
                  prefix_cache: bool = False, prefill_chunk: int = 0,
+                 max_queue: int = 0, preempt: bool = False,
+                 faults: Optional[Any] = None,
                  extra_batch: Optional[Dict[str, Any]] = None,
                  default_params: Optional[SamplingParams] = None):
         self.engine = Engine(
@@ -78,7 +89,8 @@ class LLM:
             extra_batch=extra_batch, cache_layout=cache_layout,
             page_size=page_size, num_pages=num_pages,
             bucket_prompts=bucket_prompts, prefix_cache=prefix_cache,
-            prefill_chunk=prefill_chunk,
+            prefill_chunk=prefill_chunk, max_queue=max_queue,
+            preempt=preempt, faults=faults,
         )
         self.default_params = default_params or SamplingParams()
         self._uid = 0
@@ -94,15 +106,23 @@ class LLM:
             slots=slots if slots is not None else sc.batch_size,
             max_len=sc.max_seq_len, cache_layout=sc.cache_layout,
             page_size=sc.page_size, prefix_cache=sc.prefix_cache,
-            prefill_chunk=sc.prefill_chunk, extra_batch=extra_batch,
+            prefill_chunk=sc.prefill_chunk, max_queue=sc.max_queue,
+            preempt=sc.preempt, extra_batch=extra_batch,
             default_params=SamplingParams(
                 temperature=sc.temperature, top_k=sc.top_k, top_p=sc.top_p,
-                seed=sc.seed,
+                seed=sc.seed, deadline_ms=sc.deadline_ms,
             ),
         )
 
     # ---------------------------------------------------------- internals
-    def _submit(self, prompts, params: ParamsArg) -> List[Request]:
+    def _submit(self, prompts, params: ParamsArg) -> List[Optional[Request]]:
+        """Submit every prompt; returns one entry per prompt, ``None``
+        where the engine's bounded queue rejected it (surfaced to the
+        caller as an ``"overloaded"`` outcome — the accepted prompts in
+        the same batch still run).  Validation errors, by contrast, abort
+        the whole call: they can never succeed on retry, and partial
+        silent submission would leave orphans decoding inside later
+        calls."""
         if isinstance(params, SamplingParams) or params is None:
             plist: List[Optional[SamplingParams]] = [params] * len(prompts)
         else:
@@ -111,7 +131,7 @@ class LLM:
                 raise ValueError(
                     f"got {len(plist)} SamplingParams for {len(prompts)} prompts"
                 )
-        reqs = []
+        reqs: List[Optional[Request]] = []
         try:
             for prompt, sp in zip(prompts, plist):
                 req = Request(
@@ -120,13 +140,18 @@ class LLM:
                     params=sp or self.default_params,
                 )
                 self._uid += 1
-                self.engine.submit(req)
+                try:
+                    self.engine.submit(req)
+                except EngineOverloaded:
+                    reqs.append(None)
+                    continue
                 reqs.append(req)
         except Exception:
             # mid-batch validation failure: withdraw what was already
             # queued, or it would silently decode inside the next call
             for r in reqs:
-                self.engine.cancel(r)
+                if r is not None:
+                    self.engine.cancel(r)
             raise
         return reqs
 
@@ -138,19 +163,26 @@ class LLM:
         self.engine.run(max_steps=max_steps)
         outs = []
         for i, req in enumerate(reqs):
+            if req is None:
+                # bounded-queue rejection at submit: a typed outcome, so
+                # one saturated engine degrades per-request, not per-call
+                outs.append(Completion(
+                    index=i, tokens=[], finish_reason="overloaded",
+                ))
+                continue
             if not req.finish_reason:
                 # same leak-prevention as stream(): an overrun must not
                 # leave orphans decoding inside later calls
                 for r in reqs:
-                    if not r.finish_reason:
+                    if r is not None and not r.finish_reason:
                         self.engine.cancel(r)
                 raise RuntimeError(
                     f"request {req.uid} unfinished after {max_steps} steps"
                 )
             outs.append(Completion(
-                index=i, tokens=list(req.output),
+                index=i, tokens=list(req.output or []),
                 finish_reason=req.finish_reason, logprobs=req.logprobs,
-                ttft_s=req.t_first - req.t_submit,
+                ttft_s=(req.t_first - req.t_submit) if req.t_first else 0.0,
                 latency_s=req.t_done - req.t_submit,
             ))
         return outs
@@ -170,25 +202,47 @@ class LLM:
         reqs = self._submit(prompts, params)
         return self._stream(reqs, max_steps)
 
-    def _stream(self, reqs: List[Request],
+    def _stream(self, reqs: List[Optional[Request]],
                 max_steps: int) -> Iterator[StreamChunk]:
         emitted = [0] * len(reqs)
+        closed = [False] * len(reqs)
         try:
+            # overload rejections are known before any engine step: emit
+            # their terminal chunks up front (token=-1, no tokens exist)
+            for i, req in enumerate(reqs):
+                if req is None:
+                    closed[i] = True
+                    yield StreamChunk(
+                        index=i, token=-1, done=True,
+                        finish_reason="overloaded",
+                    )
             for _ in range(max_steps):
                 self.engine.step()
                 for i, req in enumerate(reqs):
+                    if req is None:
+                        continue
                     out = req.output or []
                     while emitted[i] < len(out):
                         j = emitted[i]
                         emitted[i] += 1
                         last = emitted[i] == len(out)
                         fin = req.finish_reason if last else ""
+                        closed[i] = closed[i] or bool(fin)
                         yield StreamChunk(
                             index=i, token=out[j],
                             logprob=(req.logprobs[j] if req.logprobs else None),
                             done=bool(fin), finish_reason=fin,
                         )
-                if all(r.finish_reason for r in reqs):
+                    if req.finish_reason and not closed[i]:
+                        # finished without a fresh token (queued timeout,
+                        # quarantined first token): the consumer still
+                        # needs a terminal chunk to stop waiting on i
+                        closed[i] = True
+                        yield StreamChunk(
+                            index=i, token=-1, done=True,
+                            finish_reason=req.finish_reason,
+                        )
+                if all(closed):
                     return
             raise RuntimeError(
                 f"stream unfinished after {max_steps} engine steps"
@@ -198,5 +252,5 @@ class LLM:
             # is still in flight so orphaned requests don't keep decoding
             # (and holding slots) inside later generate()/stream() calls
             for req in reqs:
-                if not req.finish_reason:
+                if req is not None and not req.finish_reason:
                     self.engine.cancel(req)

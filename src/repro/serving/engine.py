@@ -68,16 +68,54 @@ Token *selection* happens inside the jitted decode step
 degrade to argmax), so the steady-state decode loop is token-in /
 token-out: the previous step's sampled tokens feed the next step without
 ever visiting the host, and the only host traffic per step is ONE bulk
-``jax.device_get`` of the sampled (tokens, logprobs) pair for
-bookkeeping and stop checks.  A request without params decodes greedily
-with its legacy ``max_new``/``eos_id`` fields — old ``Engine(...)`` call
-sites keep working unchanged; ``serving/api.py::LLM`` is the v2 facade.
+``jax.device_get`` of the sampled (tokens, logprobs, fault flags) triple
+for bookkeeping and stop checks.  A request without params decodes
+greedily with its legacy ``max_new``/``eos_id`` fields — old
+``Engine(...)`` call sites keep working unchanged;
+``serving/api.py::LLM`` is the v2 facade.
+
+Fault tolerance (the request-lifecycle hardening pass):
+
+  * **Bounded backpressure** — ``max_queue=N`` caps the admission queue;
+    ``submit`` raises the typed, retriable :class:`EngineOverloaded`
+    instead of growing the queue without bound (overload then costs the
+    caller a rejection, not every caller an unbounded TTFT).
+  * **Deadlines** — a request carrying ``deadline_ms`` (on its
+    ``SamplingParams`` or directly on the ``Request``) times out as a
+    wall-clock SLO from submit: expired *queued* requests finish with
+    ``finish_reason="timeout"`` without running; expired *in-flight*
+    requests are released at the next step boundary with whatever
+    tokens they produced.  ``clock`` is injectable for deterministic
+    tests.
+  * **Preempt-and-requeue** (``preempt=True``, paged layout) — when the
+    queue head is blocked on page pressure, the engine evicts the
+    most-recently-admitted in-flight decode instead of head-of-line
+    blocking: the victim's exclusive pages free (prefix-registered ones
+    park in the evictable set), the request re-queues right behind the
+    blocked head, and on re-admission it *replays* via prefill over
+    prompt + generated-so-far.  Its generation index is the resume
+    cursor — the counter-hash sampling PRNG (keyed on request seed +
+    generation index, PR 4) makes the resumed request token-identical
+    to an unpreempted run.  Each request is preempted at most once and
+    only requests that were never preempted trigger or suffer
+    preemption, so the cycle cannot livelock.
+  * **Fault isolation** — a non-finite sentinel inside the jitted step
+    (and the admission first-token path) quarantines only the offending
+    slot with ``finish_reason="error"``; every other slot's sampled
+    token is provably untouched (the sentinel also sanitizes the bad
+    row before it reaches the fused sampler, so a NaN in one slot's
+    logits can never poison a batch-wide reduction).
+  * **Observability** — :meth:`Engine.health` snapshots queue depth,
+    slot occupancy, free pages, a steps-since-progress watchdog counter
+    and the lifecycle counters; ``serving/faults.py`` injects
+    deterministic fault schedules (NaN logits, allocator outages,
+    crash-and-rebuild) through the ``faults=FaultPlan(...)`` hook.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -95,6 +133,46 @@ from repro.serving.paged_cache import (
 from repro.serving.sampling import SamplingParams, StopChecker, effective_params
 
 
+class EngineOverloaded(RuntimeError):
+    """Typed admission rejection: the bounded queue is full.
+
+    Raised by :meth:`Engine.submit` when ``max_queue`` is reached.  It is
+    *retriable* by contract — the request was not mutated or partially
+    admitted, and the caller may resubmit once :meth:`Engine.health`
+    shows the queue draining (the serving analogue of HTTP 429/503)."""
+
+    retriable = True
+
+    def __init__(self, uid: int, depth: int, max_queue: int):
+        super().__init__(
+            f"request {uid}: admission queue full ({depth}/{max_queue}); "
+            f"retry after the queue drains"
+        )
+        self.queue_depth = depth
+        self.max_queue = max_queue
+
+
+@dataclasses.dataclass
+class EngineHealth:
+    """One consistent snapshot of engine liveness (``Engine.health()``).
+
+    ``steps_since_progress`` is the watchdog: engine steps since any
+    request was admitted, advanced a prefill chunk, emitted a token, or
+    finished.  A serving loop that sees it grow while ``queue_depth > 0``
+    is wedged (e.g. a permanent allocator outage) and should alert or
+    recycle the engine."""
+
+    queue_depth: int
+    slots: int
+    active_slots: int
+    prefilling: int
+    free_pages: Optional[int]       # None for the dense layout
+    total_pages: Optional[int]
+    steps: int
+    steps_since_progress: int
+    counters: Dict[str, int]
+
+
 @dataclasses.dataclass
 class Request:
     uid: int
@@ -106,13 +184,19 @@ class Request:
     # submit; params.max_new=None inherits the field above) and
     # eos_id >= 0 folds into the stop-token set.
     params: Optional[SamplingParams] = None
+    # wall-clock SLO from submit, in ms (params.deadline_ms wins when
+    # set; None = no deadline)
+    deadline_ms: Optional[float] = None
     # filled by the engine:
     output: Optional[List[int]] = None
     logprobs: Optional[List[float]] = None   # per-token, if params.logprobs
-    finish_reason: str = ""                  # "stop" | "length" once done
+    # "stop" | "length" | "timeout" | "error" | "cancelled" once done
+    finish_reason: str = ""
+    preempted: int = 0                       # times evicted-and-requeued
     t_submit: float = 0.0
     t_first: float = 0.0
     t_done: float = 0.0
+    _seq: int = -1                           # submit order (engine-assigned)
 
 
 @dataclasses.dataclass
@@ -120,7 +204,8 @@ class _Prefill:
     """A slot mid-way through an incremental (chunked/suffix) prefill."""
 
     req: Request
-    prompt: np.ndarray           # original, unpadded prompt
+    prompt: np.ndarray           # original, unpadded prompt (+ replayed
+                                 # generated tokens for a resumed request)
     done: int                    # tokens whose KV is already in the pages
 
 
@@ -129,7 +214,10 @@ class Engine:
                  extra_batch: Optional[Dict[str, Any]] = None,
                  cache_layout: str = "dense", page_size: int = 16,
                  num_pages: int = 0, bucket_prompts: Optional[bool] = None,
-                 prefix_cache: bool = False, prefill_chunk: int = 0):
+                 prefix_cache: bool = False, prefill_chunk: int = 0,
+                 max_queue: int = 0, preempt: bool = False,
+                 faults: Optional[Any] = None,
+                 clock: Callable[[], float] = time.time):
         self.model = model
         self.params = params
         self.B = slots
@@ -166,6 +254,15 @@ class Engine:
                     "prefix_cache / prefill_chunk require a causal "
                     "attention-only decoder with no frontend rows"
                 )
+        self.max_queue = int(max_queue)
+        self.preempt = bool(preempt)
+        if self.preempt and cache_layout != "paged":
+            raise ValueError(
+                "preempt=True requires cache_layout='paged' — preemption "
+                "frees page-pool pressure, which the dense layout has none of"
+            )
+        self.faults = faults
+        self._clock = clock
 
         if cache_layout == "paged":
             # default pool: every slot can hold a full max_len sequence,
@@ -190,11 +287,27 @@ class Engine:
         self.cache = cache
         self.slot_req: List[Optional[Request]] = [None] * slots
         self.slot_left: np.ndarray = np.zeros((slots,), np.int32)
+        self.slot_deadline: List[Optional[float]] = [None] * slots
         self.queue: List[Request] = []
         self.done: List[Request] = []
         # slots mid-prefill, in admission order (FIFO chunk scheduling)
         self._prefilling: List[int] = []
         self._prefill_state: Dict[int, _Prefill] = {}
+
+        # lifecycle bookkeeping: submit order (preemption victims must be
+        # younger than nobody they displace from the queue), admission
+        # recency (the preemption victim is the NEWEST in-flight decode),
+        # and the health counters + watchdog.
+        self._next_seq = 0
+        self._admit_counter = 0
+        self._admit_order: List[int] = [-1] * slots
+        self.steps = 0
+        self._steps_since_progress = 0
+        self._progress = False
+        self.counters: Dict[str, int] = {
+            "submitted": 0, "completed": 0, "rejected": 0, "timeouts": 0,
+            "errors": 0, "cancelled": 0, "preempted": 0, "resumed": 0,
+        }
 
         # per-slot sampling state.  The numeric params live on DEVICE
         # ((B,) vectors consumed by the fused sampler inside the jitted
@@ -215,6 +328,9 @@ class Engine:
         # token-in/token-out: the last sampled token per slot stays on
         # device and feeds the next decode step directly
         self._last_tok = jnp.zeros((slots,), jnp.int32)
+        # steady-state fault-injection vector (all clear) kept on device:
+        # passing it adds no host->device traffic to the decode step
+        self._no_inject = jnp.zeros((slots,), bool)
 
         if bucket_prompts is None:
             bucket_prompts = paddable
@@ -222,40 +338,59 @@ class Engine:
 
         impl = cfg.kernel_impl
 
-        def _fused_step(params, cache, tok, samp):
+        def _fused_step(params, cache, tok, samp, inject):
             """One decode iteration with ON-DEVICE token selection.
 
             Everything the old loop did on the host — argmax, idle-slot
             pos reset, next-token feedback — happens inside this one
             jitted call: the engine only transfers the sampled (tok,
-            logp) pair back, once, per step."""
+            logp, bad) triple back, once, per step.  ``inject`` is the
+            fault layer's NaN vector (all-False in steady state); the
+            non-finite sentinel quarantines a poisoned slot's row —
+            whether injected or organic — BEFORE it reaches the fused
+            sampler, so one slot's NaN can never leak into another
+            slot's token."""
             logits, cache = model.decode_step(params, cache, tok[:, None])
             # idle / mid-prefill slots stepped in lockstep: reset their
             # positions (their writes touched no live data)
             cache["pos"] = jnp.where(samp["active"], cache["pos"], 0)
+            row = logits[:, -1]
+            row = jnp.where(inject[:, None], jnp.float32(jnp.nan), row)
+            bad = samp["active"] & ~jnp.all(jnp.isfinite(row), axis=-1)
+            row = jnp.where(bad[:, None], 0.0, row)
             # idle slots read as greedy (temp 0) no matter what request
             # last held them — otherwise one retired sampled request
             # would defeat the sampler's all-greedy fast path for every
             # later greedy-only step
             nxt, logp = ops.sample_tokens(
-                logits[:, -1],
+                row,
                 jnp.where(samp["active"], samp["temp"], 0.0),
                 samp["top_k"], samp["top_p"],
                 samp["seed"], samp["gen"], impl=impl,
             )
             nxt = jnp.where(samp["active"], nxt, 0)
             samp = dict(samp, gen=samp["gen"] + samp["active"].astype(jnp.int32))
-            return nxt, logp, cache, samp
+            return nxt, logp, bad, cache, samp
 
-        def _admit_slot(samp, last_tok, logits, slot, temp, k, p, seed):
-            """Sample a request's FIRST token from its prefill logits and
+        def _admit_slot(samp, last_tok, logits, slot, temp, k, p, seed,
+                        gen0, inject):
+            """Sample a request's NEXT token from its prefill logits and
             bind every per-slot device field in one jitted call —
             admission costs one dispatch + one device_get instead of a
             string of eager .at[].set updates (which showed up directly
-            in shared-prefix TTFT)."""
+            in shared-prefix TTFT).  ``gen0`` is the generation index to
+            sample at: 0 for a fresh prompt, the number of already-
+            emitted tokens for a preempted request replaying its
+            prompt+output (same counter-hash stream => same tokens as an
+            unpreempted run).  The same non-finite sentinel as the
+            decode step guards the prefill logits."""
+            row = logits[:, -1]
+            row = jnp.where(inject, jnp.float32(jnp.nan), row)
+            bad = ~jnp.all(jnp.isfinite(row))
+            row = jnp.where(bad, 0.0, row)
             tok, logp = ops.sample_tokens(
-                logits[:, -1], temp[None], k[None], p[None], seed[None],
-                jnp.zeros((1,), jnp.uint32), impl=impl,
+                row, temp[None], k[None], p[None], seed[None],
+                gen0[None].astype(jnp.uint32), impl=impl,
             )
             samp = dict(
                 samp,
@@ -263,10 +398,10 @@ class Engine:
                 top_k=samp["top_k"].at[slot].set(k),
                 top_p=samp["top_p"].at[slot].set(p),
                 seed=samp["seed"].at[slot].set(seed),
-                gen=samp["gen"].at[slot].set(1),
+                gen=samp["gen"].at[slot].set((gen0 + 1).astype(jnp.int32)),
                 active=samp["active"].at[slot].set(True),
             )
-            return tok, logp, samp, last_tok.at[slot].set(tok[0])
+            return tok, logp, bad, samp, last_tok.at[slot].set(tok[0])
 
         def _release_slot(samp, pos, slot):
             """Deactivate a finished slot and reset its pos (one call)."""
@@ -296,6 +431,8 @@ class Engine:
             # every admission/capacity path sees one source of truth
             # (params.max_new=None inherits the request's own budget)
             req.max_new = req.params.max_new
+        if req.params is not None and req.params.deadline_ms is not None:
+            req.deadline_ms = req.params.deadline_ms
         if req.max_new < 1:
             raise ValueError(
                 f"request {req.uid}: max_new must be >= 1 (got {req.max_new})"
@@ -317,7 +454,18 @@ class Engine:
                 f"pool ({self.alloc.num_pages - 1} usable pages of "
                 f"{self.alloc.page_size})"
             )
-        req.t_submit = time.time()
+        # bounded backpressure: reject instead of queueing without bound.
+        # Validation errors above are NOT rejections (they can never
+        # succeed on retry); this one is — the typed exception tells the
+        # caller to back off and try again.  Internal re-queues (preempted
+        # requests) bypass submit and may transiently exceed the bound.
+        if self.max_queue and len(self.queue) >= self.max_queue:
+            self.counters["rejected"] += 1
+            raise EngineOverloaded(req.uid, len(self.queue), self.max_queue)
+        req.t_submit = self._clock()
+        req._seq = self._next_seq
+        self._next_seq += 1
+        self.counters["submitted"] += 1
         self.queue.append(req)
 
     def _bucket(self, n: int) -> int:
@@ -376,47 +524,170 @@ class Engine:
     # ------------------------------------------------- sampling plumbing
     def _set_slot_params(self, slot: int, req: Request) -> None:
         """Bind a request's sampling intent to its slot (host side: the
-        stop machinery).  The device-side per-slot vectors are written by
-        ``_emit_first`` in one fused call — nothing reads them while the
-        slot is inactive."""
+        stop machinery, deadline, admission recency).  The device-side
+        per-slot vectors are written by ``_emit_first`` in one fused
+        call — nothing reads them while the slot is inactive."""
         sp = effective_params(req)
         self.slot_sp[slot] = sp
         self.slot_stop[slot] = StopChecker(sp, req.eos_id)
+        self.slot_deadline[slot] = self._abs_deadline(req)
+        self._admit_order[slot] = self._admit_counter
+        self._admit_counter += 1
+
+    def _abs_deadline(self, req: Request) -> Optional[float]:
+        if req.deadline_ms is None:
+            return None
+        return req.t_submit + req.deadline_ms / 1e3
+
+    def _nan_slots(self) -> List[int]:
+        if self.faults is None:
+            return []
+        return [s for s in self.faults.nan_slots(self.steps)
+                if 0 <= s < self.B]
 
     def _emit_first(self, slot: int, logits) -> None:
-        """Sample the first generated token from prefill logits (on
-        device, generation index 0), bind the slot's device-side sampling
-        state, record the token, and flip the slot to lockstep decoding
-        (or finish immediately on stop/budget)."""
+        """Sample the next generated token from prefill logits (on
+        device, at the request's generation index — 0 for a fresh prompt,
+        the replay cursor for a resumed one), bind the slot's device-side
+        sampling state, record the token, and flip the slot to lockstep
+        decoding (or finish immediately on stop/budget/poisoned
+        logits)."""
         req = self.slot_req[slot]
         sp = self.slot_sp[slot]
-        tok_d, logp_d, self._samp, self._last_tok = self._admit_slot(
+        gen0 = len(req.output) if req.output else 0
+        inject = slot in self._nan_slots()
+        tok_d, logp_d, bad_d, self._samp, self._last_tok = self._admit_slot(
             self._samp, self._last_tok, logits, np.int32(slot),
             np.float32(sp.temperature), np.int32(sp.top_k),
             np.float32(sp.top_p), np.uint32(sp.seed & 0xFFFFFFFF),
+            np.uint32(gen0), np.bool_(inject),
         )
-        nxt, lp = jax.device_get((tok_d, logp_d))
+        nxt, lp, bad = jax.device_get((tok_d, logp_d, bad_d))
+        if bool(bad):
+            # poisoned prefill logits: quarantine this slot only
+            req.finish_reason = "error"
+            self._finish(slot)
+            return
         t0 = int(nxt[0])
-        req.output = [t0]
-        req.logprobs = [float(lp[0])] if sp.logprobs else None
-        req.t_first = time.time()
-        self.slot_left[slot] = req.max_new - 1
+        if gen0 == 0:
+            req.output = [t0]
+            req.logprobs = [float(lp[0])] if sp.logprobs else None
+            req.t_first = self._clock()
+        else:
+            # preempted request resuming: the replayed prefill re-derived
+            # the logits its next token would have seen, and gen0 keys
+            # the same PRNG draw — the token stream continues exactly
+            self.counters["resumed"] += 1
+            req.output.append(t0)
+            if req.logprobs is not None:
+                req.logprobs.append(float(lp[0]))
+        self.slot_left[slot] = req.max_new - len(req.output)
         fin = self.slot_stop[slot].check(req.output, self.slot_left[slot])
         if fin:
             req.finish_reason = fin
             self._finish(slot)
 
+    # ------------------------------------------------------- preemption
+    def _replay_prompt(self, req: Request) -> np.ndarray:
+        """The token sequence a (possibly preempted) request prefills:
+        prompt + generated-so-far.  For a fresh request this is just the
+        prompt; for a resumed one the generated tokens become prompt
+        rows, so their KV is rebuilt and decoding continues from the
+        exact position it was evicted at."""
+        if req.output:
+            return np.concatenate(
+                [req.prompt, np.asarray(req.output, np.int32)]
+            )
+        return req.prompt
+
+    def _requeue(self, req: Request) -> None:
+        """Re-queue a preempted request in submit order among the entries
+        BEHIND the blocked head (position 0): the head keeps the front —
+        putting the older victim ahead of it would only re-admit the
+        victim into the pages it just freed and spin forever."""
+        i = len(self.queue)
+        for j in range(1, len(self.queue)):
+            if self.queue[j]._seq > req._seq:
+                i = j
+                break
+        self.queue.insert(max(i, 1) if self.queue else 0, req)
+
+    def _preempt_slot(self, slot: int) -> None:
+        """Evict an in-flight decode: deactivate the slot, release its
+        pages (exclusive ones free; prefix-registered ones park in the
+        evictable set, still indexed — a resumed replay may hash-hit
+        them), and re-queue the request.  No sampling state needs saving:
+        the generation index IS the resume cursor, and the counter-hash
+        PRNG replays the remaining tokens identically."""
+        req = self.slot_req[slot]
+        req.preempted += 1
+        self.counters["preempted"] += 1
+        self.slot_req[slot] = None
+        self.slot_left[slot] = 0
+        self.slot_sp[slot] = None
+        self.slot_stop[slot] = None
+        self.slot_deadline[slot] = None
+        self._samp, self.cache["pos"] = self._release_slot(
+            self._samp, self.cache["pos"], np.int32(slot)
+        )
+        self.alloc.release(slot)
+        self._push_table()
+        self._requeue(req)
+
+    def _preempt_for(self, head: Request, need: int, pp) -> bool:
+        """Make room for the blocked queue head by evicting the newest
+        in-flight decode(s); True iff the head fits afterwards.  Guards:
+
+          * off unless ``preempt=True`` (head-of-line blocking stays the
+            default behavior);
+          * a once-preempted request neither triggers nor suffers
+            preemption — every request is evicted at most once, so the
+            preempt/requeue cycle terminates;
+          * prechecked: victims' exclusively-held pages plus the free
+            pool must cover the head's cost, so pages are never freed
+            without an admission to consume them."""
+        if not self.preempt or head.preempted:
+            return False
+        victims = [
+            s for s in range(self.B)
+            if self.slot_req[s] is not None
+            and s not in self._prefill_state
+            and self.slot_req[s].preempted == 0
+        ]
+        if not victims:
+            return False
+        plan = self.alloc.plan(need, pp)
+        avail = self.alloc.free_pages + sum(
+            self.alloc.releasable(s) for s in victims
+        )
+        if plan.cost > avail:
+            return False
+        victims.sort(key=lambda s: self._admit_order[s])
+        while victims:
+            if self.alloc.can_admit(need, self.alloc.plan(need, pp)):
+                return True
+            self._preempt_slot(victims.pop())   # newest-admitted first
+        return self.alloc.can_admit(need, self.alloc.plan(need, pp))
+
+    # ------------------------------------------------------------- admit
     def _admit(self) -> None:
+        if self.faults is not None and self.faults.alloc_blocked(self.steps):
+            return  # injected allocator outage: no admissions this step
         for slot in range(self.B):
             if self.slot_req[slot] is not None or not self.queue:
                 continue
             req = self.queue[0]
-            L = len(req.prompt)
-            need = L + self.n_front + req.max_new
+            pp = self._replay_prompt(req)
+            L = len(pp)
+            # total budget is invariant under replay: prompt + max_new
+            # (generated tokens move from budget to prompt rows)
+            need = len(req.prompt) + self.n_front + req.max_new
             if self._incremental:
-                plan = self.alloc.plan(need, req.prompt)
+                plan = self.alloc.plan(need, pp)
                 if not self.alloc.can_admit(need, plan):
-                    break  # head-of-line blocking keeps FIFO order
+                    if not self._preempt_for(req, need, pp):
+                        break  # head-of-line blocking keeps FIFO order
+                    plan = self.alloc.plan(need, pp)
                 self.queue.pop(0)
                 self.alloc.alloc(slot, need, plan)
                 if self.alloc.last_cow is not None:
@@ -432,20 +703,22 @@ class Engine:
                 self.slot_req[slot] = req
                 self._set_slot_params(slot, req)
                 self._prefill_state[slot] = _Prefill(
-                    req=req, prompt=req.prompt, done=plan.cached_tokens
+                    req=req, prompt=pp, done=plan.cached_tokens
                 )
                 self._prefilling.append(slot)
                 self._push_table()
+                self._progress = True
                 continue
             if self.alloc is not None and not self.alloc.can_admit(need):
-                # head-of-line blocking keeps FIFO order: wait for pages
-                break
+                if not self._preempt_for(req, need, None):
+                    # head-of-line blocking keeps FIFO order: wait for pages
+                    break
             self.queue.pop(0)
             Sb = self._bucket(L)
-            prompt = req.prompt
+            prompt = pp
             if Sb != L:
                 prompt = np.zeros((Sb,), np.int32)
-                prompt[:L] = req.prompt
+                prompt[:L] = pp
             batch = {"tokens": jnp.asarray(prompt[None, :], jnp.int32)}
             for k, v in self.extra.items():
                 batch[k] = v
@@ -460,6 +733,7 @@ class Engine:
                 self._write_slot(slot, one_cache, int(one_cache["pos"]))
             self.slot_req[slot] = req
             self._set_slot_params(slot, req)
+            self._progress = True
             self._emit_first(slot, logits)
 
     # ----------------------------------------------------- chunked prefill
@@ -480,6 +754,7 @@ class Engine:
             jnp.int32(st.done), jnp.int32(c),
         )
         st.done += c
+        self._progress = True
         if st.done < L:
             return
         # prompt complete: register its full blocks for future sharing,
@@ -504,7 +779,8 @@ class Engine:
             if q is req:
                 del self.queue[i]
                 req.finish_reason = "cancelled"
-                req.t_done = time.time()
+                req.t_done = self._clock()
+                self.counters["cancelled"] += 1
                 self.done.append(req)
                 return
         for slot in range(self.B):
@@ -520,12 +796,22 @@ class Engine:
         req = self.slot_req[slot]
         if not req.finish_reason:
             req.finish_reason = "length"
-        req.t_done = time.time()
+        reason = req.finish_reason
+        if reason == "timeout":
+            self.counters["timeouts"] += 1
+        elif reason == "error":
+            self.counters["errors"] += 1
+        elif reason == "cancelled":
+            self.counters["cancelled"] += 1
+        else:
+            self.counters["completed"] += 1
+        req.t_done = self._clock()
         self.done.append(req)
         self.slot_req[slot] = None
         self.slot_left[slot] = 0
         self.slot_sp[slot] = None
         self.slot_stop[slot] = None
+        self.slot_deadline[slot] = None
         # one fused call: deactivate + reset pos so the slot comes back
         # with clean semantics immediately (the in-jit reset only covers
         # slots idle during a decode step)
@@ -536,6 +822,45 @@ class Engine:
             self.alloc.release(slot)
             self._push_table()
 
+    # ---------------------------------------------------------- deadlines
+    def _expire_queued(self) -> None:
+        """Finish queued requests whose deadline passed before they ever
+        ran (``finish_reason="timeout"``).  A preempted request waiting to
+        resume keeps its partial output."""
+        if not self.queue:
+            return
+        now = self._clock()
+        kept: List[Request] = []
+        for req in self.queue:
+            dl = self._abs_deadline(req)
+            if dl is not None and now >= dl:
+                req.finish_reason = "timeout"
+                req.t_done = now
+                self.counters["timeouts"] += 1
+                self.done.append(req)
+            else:
+                kept.append(req)
+        self.queue = kept
+
+    def _expire_in_flight(self) -> None:
+        """Release in-flight requests past deadline at the step boundary
+        (they keep the tokens produced so far)."""
+        if all(d is None for d in self.slot_deadline):
+            return
+        now = self._clock()
+        for s in range(self.B):
+            dl = self.slot_deadline[s]
+            if dl is None or self.slot_req[s] is None or now < dl:
+                continue
+            if s in self._prefill_state:
+                del self._prefill_state[s]
+                self._prefilling.remove(s)
+                if self.alloc is not None:
+                    # _push_table in _finish re-derives the mask
+                    pass
+            self.slot_req[s].finish_reason = "timeout"
+            self._finish(s)
+
     # --------------------------------------------------------------- step
     def step(self) -> int:
         """Admit + bounded prefill chunks + one decode iteration over all
@@ -545,7 +870,16 @@ class Engine:
         advances — by ONE chunk — per step, so a long prompt delays each
         decode iteration by at most `prefill_chunk` tokens of compute.
         With no decodes to protect, every mid-prefill slot advances a
-        chunk (there is nothing to stall, and admission ramps faster)."""
+        chunk (there is nothing to stall, and admission ramps faster).
+
+        Lifecycle order: queued deadline expiry -> admission (possibly
+        preempting) -> prefill chunks -> lockstep decode + quarantine ->
+        in-flight deadline expiry (the "next step boundary" of the
+        deadline contract) -> watchdog accounting."""
+        self.steps += 1
+        self._progress = False
+        done0 = len(self.done)
+        self._expire_queued()
         self._admit()
         if self._prefilling:
             decoding = any(
@@ -564,13 +898,26 @@ class Engine:
             # happens inside the jitted step; the sampled tokens feed the
             # next iteration straight from device memory, and the ONLY
             # host traffic is this one bulk device_get per step
-            tok_d, logp_d, self.cache, self._samp = self._decode(
-                self.params, self.cache, self._last_tok, self._samp
+            inject = self._no_inject
+            bad_slots = self._nan_slots()
+            if bad_slots:
+                v = np.zeros((self.B,), bool)
+                v[bad_slots] = True
+                inject = jnp.asarray(v)
+            tok_d, logp_d, bad_d, self.cache, self._samp = self._decode(
+                self.params, self.cache, self._last_tok, self._samp, inject
             )
             self._last_tok = tok_d
-            nxt, logps = jax.device_get((tok_d, logp_d))
+            nxt, logps, bads = jax.device_get((tok_d, logp_d, bad_d))
             for s in active:
                 req = self.slot_req[s]
+                if bads[s]:
+                    # non-finite logits in THIS slot only: quarantine it
+                    # (drop the garbage token) and leave every other
+                    # slot's sampled token untouched
+                    req.finish_reason = "error"
+                    self._finish(s)
+                    continue
                 t = int(nxt[s])
                 req.output.append(t)
                 if req.logprobs is not None:
@@ -580,7 +927,27 @@ class Engine:
                 if fin:
                     req.finish_reason = fin
                     self._finish(s)
+        self._expire_in_flight()
+        if active or self._progress or len(self.done) != done0:
+            self._steps_since_progress = 0
+        else:
+            self._steps_since_progress += 1
         return len(active)
+
+    # -------------------------------------------------------------- health
+    def health(self) -> EngineHealth:
+        """Cheap host-side liveness snapshot (no device sync)."""
+        return EngineHealth(
+            queue_depth=len(self.queue),
+            slots=self.B,
+            active_slots=sum(r is not None for r in self.slot_req),
+            prefilling=len(self._prefilling),
+            free_pages=self.alloc.free_pages if self.alloc else None,
+            total_pages=(self.alloc.num_pages - 1) if self.alloc else None,
+            steps=self.steps,
+            steps_since_progress=self._steps_since_progress,
+            counters=dict(self.counters),
+        )
 
     def run(self, max_steps: int = 10_000) -> List[Request]:
         steps = 0

@@ -151,6 +151,16 @@ class PageAllocator:
         cost = plan.cost if plan is not None else need
         return cost <= self.free_pages
 
+    def releasable(self, slot: int) -> int:
+        """Pages admission would get back if `slot` released right now:
+        every owned page whose only live reference is this slot (it would
+        land on the free list, or park registered in the evictable set —
+        either way it counts toward :attr:`free_pages`).  Shared pages
+        with other live referents stay mapped and free nothing.  The
+        engine's preempt-and-requeue policy prechecks this before
+        evicting a victim, so it never frees pages it cannot use."""
+        return sum(1 for p in self._owned[slot] if self._ref[p] == 1)
+
     def fits_slot(self, tokens: int) -> bool:
         """True iff `tokens` can EVER fit (ignores current free pool)."""
         need = pages_for(tokens, self.page_size)

@@ -32,7 +32,11 @@ class SamplingParams:
     generated token; ``stop_sequences`` stop when the generated suffix
     matches a multi-token pattern (matched tokens stay in the output,
     like eos).  ``logprobs`` records the chosen token's log-probability
-    per step.
+    per step.  ``deadline_ms`` is a wall-clock SLO measured from submit:
+    a request still queued past its deadline finishes with
+    ``finish_reason="timeout"`` without ever running, and an in-flight
+    request past it is released at the next engine step boundary with
+    whatever tokens it produced (``None`` = no deadline).
     """
 
     temperature: float = 0.0
@@ -43,10 +47,15 @@ class SamplingParams:
     stop_token_ids: Tuple[int, ...] = ()
     stop_sequences: Tuple[Tuple[int, ...], ...] = ()
     logprobs: bool = False
+    deadline_ms: Optional[float] = None
 
     def __post_init__(self):
         if self.temperature < 0:
             raise ValueError(f"temperature must be >= 0 (got {self.temperature})")
+        if self.deadline_ms is not None and self.deadline_ms <= 0:
+            raise ValueError(
+                f"deadline_ms must be > 0 (got {self.deadline_ms})"
+            )
         if self.top_k < 0:
             raise ValueError(f"top_k must be >= 0 (got {self.top_k})")
         if not 0.0 < self.top_p <= 1.0 + 1e-9:

@@ -38,6 +38,24 @@ from repro.training import train_step as TS
 from repro.training.train_step import TrainState
 
 
+class NonFiniteLossError(RuntimeError):
+    """Raised by ``Trainer`` after ``TrainConfig.max_nonfinite_skips``
+    CONSECUTIVE optimizer steps were skipped for non-finite loss/grads —
+    at that point the run is diverged (or the data is poisoned), not
+    transiently unlucky, and silently skipping forever would burn the
+    cluster while the loss curve flatlines.  Carries ``step`` (the last
+    offending optimizer step) and ``skips``."""
+
+    def __init__(self, step: int, skips: int):
+        super().__init__(
+            f"non-finite loss/grad-norm on {skips} consecutive steps "
+            f"(last: optimizer step {step}); update was skipped each time "
+            f"— aborting instead of training on garbage"
+        )
+        self.step = step
+        self.skips = skips
+
+
 class _DevicePrefetch:
     """Double-buffered host->device pipeline feeding the train step.
 
@@ -117,6 +135,10 @@ class Trainer:
         self.history: List[Dict[str, float]] = []
         self._pending: List[Dict] = []  # device metrics since last log
         self._tokens_seen = 0.0
+        # non-finite-step guard (see train_step.py): totals and the
+        # current consecutive-skip streak, advanced at each log flush
+        self.skipped_total = 0
+        self._skip_streak = 0
         self._it: Optional[_DevicePrefetch] = None
         self._t0 = self._t_log = 0.0
 
@@ -218,6 +240,19 @@ class Trainer:
         n = len(fetched)
         tokens = float(sum(m["tokens"] for m in fetched))
         self._tokens_seen += tokens
+        # non-finite guard bookkeeping: the jitted step already withheld
+        # the update on skipped steps; here we count them (in order, so
+        # the consecutive streak is exact) and abort a diverged run
+        for i, fm in enumerate(fetched):
+            if float(fm.get("skipped", 0.0)) > 0.0:
+                self.skipped_total += 1
+                self._skip_streak += 1
+                if self._skip_streak >= max(self.tc.max_nonfinite_skips, 1):
+                    raise NonFiniteLossError(
+                        s - n + 1 + i, self._skip_streak
+                    )
+            else:
+                self._skip_streak = 0
         m = {k: float(v) for k, v in fetched[-1].items()}
         step_time = dt / max(n, 1)
         m.update(
@@ -226,6 +261,7 @@ class Trainer:
             step_time=step_time,
             tokens_per_sec=tokens / dt if dt > 0 else 0.0,
             tokens_seen=self._tokens_seen,
+            skipped_total=self.skipped_total,
         )
         if self._model_flops:
             m["model_flops_per_sec"] = self._model_flops / step_time
@@ -238,10 +274,11 @@ class Trainer:
                 m["mfu"] = self._model_flops / step_time / self.peak_flops
         self.history.append(m)
         if self.verbose:
+            skips = f"  SKIPPED {self.skipped_total}" if self.skipped_total else ""
             print(
                 f"step {s:5d}  loss {m['loss']:.4f}  ce {m['ce_loss']:.4f}  "
                 f"gnorm {m['grad_norm']:.2f}  lr {m['lr']:.2e}  "
-                f"{m['tokens_per_sec']:.0f} tok/s  {m['wall']:.1f}s"
+                f"{m['tokens_per_sec']:.0f} tok/s  {m['wall']:.1f}s{skips}"
             )
         for h in self.hooks:
             h(s, m)

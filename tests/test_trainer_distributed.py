@@ -309,3 +309,64 @@ def test_sharded_trainer_8dev_subprocess():
     )
     assert out.returncode == 0, out.stderr[-4000:]
     assert "ALL_OK" in out.stdout
+
+
+# ------------------------------------------------------- non-finite guard
+def test_nonfinite_step_withholds_update():
+    """A step with NaN loss applies NO update: params and AdamW moments
+    keep their old values and opt.step does not advance (so the lr
+    schedule is unaffected); the metrics carry skipped=1."""
+    model = build_model(tiny_cfg())
+    tc = tiny_tc()
+    rng = np.random.default_rng(0)
+    batch = {"tokens": rng.integers(0, 64, size=(8, 32)).astype(np.int32)}
+    step_fn = jax.jit(TS.make_train_step(model, tc))
+    state = TS.init_train_state(model, jax.random.PRNGKey(0), tc)
+    s1, m1 = step_fn(state, batch)
+    assert float(m1["skipped"]) == 0.0
+    assert int(s1.opt.step) == 1
+    # poison the params: the forward loss goes non-finite, and without
+    # the guard the "update" would overwrite everything with NaN
+    import jax.numpy as jnp
+
+    poisoned = jax.tree.map(
+        lambda p: p.at[(0,) * p.ndim].set(jnp.nan)
+        if jnp.issubdtype(p.dtype, jnp.floating) else p,
+        s1.params,
+    )
+    from repro.training.train_step import TrainState
+
+    s2, m2 = step_fn(TrainState(poisoned, s1.opt), batch)
+    assert float(m2["skipped"]) == 1.0
+    assert not np.isfinite(float(m2["loss"]))
+    assert int(s2.opt.step) == 1  # did not advance
+    for got, want in zip(jax.tree.leaves(s2.params), jax.tree.leaves(poisoned)):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    for got, want in zip(jax.tree.leaves(s2.opt.mu), jax.tree.leaves(s1.opt.mu)):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_trainer_aborts_after_consecutive_nonfinite(tmp_path):
+    """K consecutive skipped steps abort the run with the offending step
+    number instead of silently flatlining for the rest of the schedule."""
+    from repro.training.loop import NonFiniteLossError
+
+    model = build_model(tiny_cfg())
+    tc = tiny_tc(total_steps=10, log_every=1, max_nonfinite_skips=3)
+    pipe = clm_pipeline(tmp_path, name="nanprot")
+    state = TS.init_train_state(model, jax.random.PRNGKey(0), tc)
+    import jax.numpy as jnp
+
+    state.params = jax.tree.map(
+        lambda p: jnp.full_like(p, jnp.nan)
+        if jnp.issubdtype(p.dtype, jnp.floating) else p,
+        state.params,
+    )
+    tr = Trainer(model, tc, verbose=False)
+    tr.prepare(pipe, state=state)
+    with pytest.raises(NonFiniteLossError) as ei:
+        while tr.step_idx < tc.total_steps:
+            tr.step()
+    assert ei.value.skips == 3
+    assert ei.value.step == 2  # steps 0,1,2 skipped -> streak hits 3 at 2
+    assert tr.skipped_total == 3
