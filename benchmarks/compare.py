@@ -1,10 +1,27 @@
 """Baseline vs optimized sweep comparison: per-(arch × shape) modeled step
-time (max of the three roofline terms) and the delta."""
+time (max of the three roofline terms) and the delta.
+
+``--bench-regress`` switches to trajectory gating instead: the newest
+record in each ``BENCH_*.json`` is compared row-by-row against the median
+of the prior CLEAN (non-dirty) records' ``tok/s=`` figures, and the
+process exits 1 if any row regressed by more than ``--threshold``
+(default 10%).  Dirty records — appended from an uncommitted working
+tree, flagged by ``benchmarks/run.py`` — never enter the baseline: their
+git rev does not identify the code that produced the number.  The median
+(not the best) of the clean history is the baseline so one lucky fast
+run cannot ratchet the gate above what a loaded CI box can reach.
+
+    python benchmarks/compare.py --bench-regress [BENCH_serving.json ...]
+"""
 from __future__ import annotations
 
+import argparse
 import glob
 import json
 import os
+import re
+import statistics
+import sys
 from typing import Dict, Tuple
 
 
@@ -24,7 +41,94 @@ def max_term(rec) -> float:
     return max(r["t_compute_s"], r["t_memory_s"], r["t_collective_s"])
 
 
+_TOKS_RE = re.compile(r"tok/s=([0-9][0-9.]*)")
+
+
+def _row_toks(row) -> float | None:
+    """Extract the throughput figure from a trajectory row's derived
+    string, e.g. ``"tok/s=1183.2 ttft_ms=69.7"`` -> 1183.2."""
+    m = _TOKS_RE.search(row.get("derived", ""))
+    return float(m.group(1)) if m else None
+
+
+def bench_regress(paths, threshold: float = 0.10) -> int:
+    """Gate the newest trajectory record against the clean history.
+
+    Returns the number of regressed rows (0 = pass).  Files with no
+    usable baseline (missing, malformed, fewer than one prior clean
+    record, or a dirty candidate in CI) are reported and skipped rather
+    than failed: the gate protects committed history, it does not require
+    one to exist yet."""
+    failures = 0
+    for path in paths:
+        name = os.path.basename(path)
+        try:
+            with open(path) as f:
+                runs = json.load(f)["runs"]
+        except (OSError, ValueError, KeyError):
+            print(f"{name}: no trajectory (skipped)")
+            continue
+        if len(runs) < 2:
+            print(f"{name}: {len(runs)} record(s) — no baseline yet (skipped)")
+            continue
+        cand = runs[-1]
+        # pre-dirty-flag records carry no key; they were appended by
+        # benchmarks/run.py from clean CI checkouts, so absent == clean
+        clean = [r for r in runs[:-1] if not r.get("dirty", False)]
+        if not clean:
+            print(f"{name}: no clean prior records (skipped)")
+            continue
+        base: Dict[str, list] = {}
+        for rec in clean:
+            for row in rec["rows"]:
+                v = _row_toks(row)
+                if v is not None:
+                    base.setdefault(row["name"], []).append(v)
+        checked = 0
+        for row in cand["rows"]:
+            v = _row_toks(row)
+            if v is None or row["name"] not in base:
+                continue
+            checked += 1
+            med = statistics.median(base[row["name"]])
+            ratio = v / med if med > 0 else 1.0
+            verdict = "REGRESSED" if ratio < 1 - threshold else "ok"
+            print(
+                f"{name}: {row['name']}: {v:.1f} tok/s vs median "
+                f"{med:.1f} over {len(base[row['name']])} clean run(s) "
+                f"({(ratio - 1) * 100:+.1f}%) {verdict}"
+            )
+            if verdict == "REGRESSED":
+                failures += 1
+        if not checked:
+            print(f"{name}: no tok/s rows shared with the baseline (skipped)")
+    return failures
+
+
 def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--bench-regress", action="store_true",
+                    help="gate newest BENCH_*.json record vs clean history")
+    ap.add_argument("--threshold", type=float, default=0.10,
+                    help="max tolerated tok/s drop (fraction, default 0.10)")
+    ap.add_argument("paths", nargs="*",
+                    help="trajectory files (default: repo-root BENCH_*.json)")
+    args = ap.parse_args()
+
+    if args.bench_regress:
+        root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+        paths = args.paths or [
+            os.path.join(root, "BENCH_serving.json"),
+            os.path.join(root, "BENCH_train.json"),
+        ]
+        failed = bench_regress(paths, args.threshold)
+        if failed:
+            print(f"bench-regress: {failed} row(s) regressed "
+                  f">{args.threshold * 100:.0f}%")
+            sys.exit(1)
+        print("bench-regress: ok")
+        return
+
     base = _load("experiments/dryrun", "")
     opt = _load("experiments/dryrun_opt", "opt")
     print("| arch | shape | mesh | baseline max-term (s) | optimized (s) | Δ |")

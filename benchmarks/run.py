@@ -57,10 +57,25 @@ def _git_rev() -> str:
         return "unknown"
 
 
+def _git_dirty() -> bool:
+    """True when the working tree differs from HEAD.  Recorded per
+    trajectory record so regression gating can skip numbers measured on
+    uncommitted code (a dirty row's rev does not identify what ran)."""
+    try:
+        out = subprocess.run(
+            ["git", "status", "--porcelain"],
+            cwd=_REPO_ROOT, capture_output=True, text=True, timeout=10,
+        )
+        return out.returncode == 0 and bool(out.stdout.strip())
+    except Exception:  # noqa: BLE001
+        return False
+
+
 def append_trajectories(rows, out_dir: str = _REPO_ROOT) -> None:
     """Append one record per trajectory file for this run's rows."""
     stamp = time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime())
     rev = _git_rev()
+    dirty = _git_dirty()
     for fname, match in _TRAJECTORIES.items():
         sel = [
             {"name": n, "us": round(us, 1), "derived": d}
@@ -74,7 +89,9 @@ def append_trajectories(rows, out_dir: str = _REPO_ROOT) -> None:
                 runs = json.load(f)["runs"]
         except (OSError, ValueError, KeyError):
             runs = []
-        runs.append({"timestamp": stamp, "git": rev, "rows": sel})
+        runs.append(
+            {"timestamp": stamp, "git": rev, "dirty": dirty, "rows": sel}
+        )
         tmp = f"{path}.tmp.{os.getpid()}"
         with open(tmp, "w") as f:
             json.dump({"runs": runs}, f, indent=1)

@@ -18,8 +18,11 @@ they agree token-for-token:
     decodes.
 
 then demos the v2 surface: a mixed greedy/sampled batch (per-request
-temperature/top-k/top-p/seed, sampled on device by the fused kernel) and
-token-level streaming.
+temperature/top-k/top-p/seed, sampled on device by the fused kernel),
+token-level streaming, and the unified telemetry hookup — a
+``MetricsRegistry`` + ``TraceRecorder`` threaded into the engine, with
+``on_step`` emitting a one-line health/exposition digest every N engine
+steps so a stall is visible *while* it is happening, not post-mortem.
 
     PYTHONPATH=src python examples/serve_continuous.py
 """
@@ -28,6 +31,7 @@ import jax
 
 from repro.configs import get_smoke_config
 from repro.models.model import build_model
+from repro.obs import MetricsRegistry, TraceRecorder
 from repro.serving.api import LLM
 from repro.serving.sampling import SamplingParams
 
@@ -112,6 +116,39 @@ def main() -> None:
     for ch in llm.stream(prompts[:2], SamplingParams(max_new=6)):
         line.append(f"r{ch.index}:{ch.token}{'#' if ch.done else ''}")
     print("  " + " ".join(line))
+
+    # ---- unified telemetry: live health every N steps + lifecycle trace ----
+    # The registry and health() count through the same increments, so the
+    # periodic line below is exactly what /metrics exposition would show.
+    print("\ntelemetry (health digest every 4 engine steps):")
+    reg, tracer = MetricsRegistry(), TraceRecorder(capacity=1024)
+
+    def on_step(eng, every=4):
+        if eng.steps % every:
+            return
+        h = eng.health()
+        print(f"  step {h.steps:3d}: queue={h.queue_depth} "
+              f"active={h.active_slots} "
+              f"completed={h.counters['completed']}")
+
+    obs_llm = LLM(model, params, slots=4, max_len=96, cache_layout="paged",
+                  page_size=16, metrics=reg, trace=tracer, on_step=on_step)
+    obs_llm.generate([p for _, p, _ in requests],
+                     [SamplingParams(max_new=n) for _, _, n in requests])
+    # registry counters are the same numbers health() reports
+    fam = reg.get("engine_requests_total")
+    eng = obs_llm.engine
+    assert all(fam.labels(k).value == v
+               for k, v in eng.health().counters.items())
+    p95 = reg.get("engine_ttft_seconds").quantile(0.95)
+    print(f"  p95 TTFT {p95 * 1e3:.1f}ms over "
+          f"{reg.get('engine_ttft_seconds').count} requests")
+    ev = [e["event"] for e in tracer.events()]
+    print(f"  trace: {len(ev)} lifecycle events "
+          f"(submit={ev.count('submit')} prefill={ev.count('prefill')} "
+          f"decode={ev.count('decode')} finish={ev.count('finish')})")
+    print("\nfirst 120 chars of Prometheus exposition:")
+    print("  " + reg.to_prometheus()[:120].replace("\n", "\n  "))
 
 
 if __name__ == "__main__":

@@ -11,6 +11,14 @@ params (greedy by default — fused on-device sampling either way):
         --continuous --cache-layout paged --page-size 16 --requests 16 \
         --prefix-cache --prefill-chunk 32 --temperature 0.8 --top-k 40
 
+Telemetry (``repro.obs``, see ``src/repro/obs/README.md``):
+``--health-every N`` prints the engine health snapshot every N steps
+while serving (default 64 — a wedged engine is visible as the watchdog
+climbs, not only at exit); ``--metrics-dir DIR`` refreshes a Prometheus
+exposition + JSON snapshot there on the same cadence; ``--trace PATH``
+writes the request-lifecycle JSONL at exit; ``--profile DIR`` captures
+a ``jax.profiler`` trace of the whole serving run.
+
 The static-batch path (``generate``) remains for encoder-decoder /
 vision-frontend archs the slot engine does not admit; it is a deprecated
 shim for decoder-only callers.
@@ -81,15 +89,55 @@ def generate(
     return toks, (toks.size / dt)
 
 
+def _health_line(h) -> str:
+    return (
+        f"steps={h.steps} queue={h.queue_depth} "
+        f"active={h.active_slots}/{h.slots} "
+        f"free_pages={h.free_pages}/{h.total_pages} "
+        f"stalled_steps={h.steps_since_progress} counters={h.counters}"
+    )
+
+
 def serve_continuous(model, params, sc: ServeConfig, *, gen: int,
-                     prompt_len: int, requests: int) -> None:
-    """Drive the continuous-batching engine through the LLM facade."""
+                     prompt_len: int, requests: int,
+                     health_every: int = 0, metrics_dir: str = "",
+                     trace_path: str = "", profile: bool = False) -> None:
+    """Drive the continuous-batching engine through the LLM facade.
+
+    Telemetry: ``health_every=N`` prints the health snapshot every N
+    engine steps WHILE serving (a stall is visible as the watchdog
+    climbs, not just in the exit summary) and, with ``metrics_dir``,
+    refreshes the Prometheus exposition + JSON snapshot there on the
+    same cadence.  ``trace_path`` writes the lifecycle JSONL at exit;
+    ``profile`` turns on the jax.profiler annotations around the jitted
+    prefill/decode dispatches."""
+    from repro.obs import MetricsRegistry, TraceRecorder
     from repro.serving.api import LLM
     from repro.serving.sampling import SamplingParams
 
+    reg = MetricsRegistry() if (metrics_dir or health_every) else None
+    tracer = TraceRecorder(capacity=16384) if trace_path else None
+
+    def _dump_metrics() -> None:
+        if reg is not None and metrics_dir:
+            import os
+
+            os.makedirs(metrics_dir, exist_ok=True)
+            reg.write_prometheus(os.path.join(metrics_dir, "serve.prom"))
+            reg.dump_json(os.path.join(metrics_dir, "serve_metrics.json"))
+
+    def _on_step(eng) -> None:
+        # periodic liveness emission: stalls show up while the watchdog
+        # climbs, not only in the exit summary
+        if health_every and eng.steps % health_every == 0:
+            print(f"  [step {eng.steps}] {_health_line(eng.health())}")
+            _dump_metrics()
+
     cfg = model.cfg
     rng = np.random.default_rng(0)
-    llm = LLM.from_config(model, params, sc)
+    llm = LLM.from_config(model, params, sc, metrics=reg, trace=tracer,
+                          profile=profile,
+                          on_step=_on_step if health_every else None)
     # a shared task preamble on half the requests exercises the prefix
     # cache the way protein/chemistry serving does (fixed scaffolds);
     # at least one full page long, else no block can ever hash-hit
@@ -136,13 +184,17 @@ def serve_continuous(model, params, sc: ServeConfig, *, gen: int,
             by_reason[c.finish_reason] = by_reason.get(c.finish_reason, 0) + 1
         print("  degraded outcomes: "
               + ", ".join(f"{k}={v}" for k, v in sorted(by_reason.items())))
-    h = eng.health()
-    print(
-        f"  health: steps={h.steps} queue={h.queue_depth} "
-        f"active={h.active_slots}/{h.slots} "
-        f"free_pages={h.free_pages}/{h.total_pages} "
-        f"stalled_steps={h.steps_since_progress} counters={h.counters}"
-    )
+    print(f"  health: {_health_line(eng.health())}")
+    _dump_metrics()
+    if tracer is not None:
+        tracer.write(trace_path)
+        print(f"  trace: {len(tracer)} lifecycle events -> {trace_path}"
+              + (f" ({tracer.dropped} older events dropped)"
+                 if tracer.dropped else ""))
+    if profile and eng.step_timer is not None and eng.step_timer.totals:
+        print("  step timer:")
+        for line in eng.step_timer.report().splitlines():
+            print(f"    {line}")
 
 
 def main() -> None:
@@ -180,6 +232,19 @@ def main() -> None:
     p.add_argument("--deadline-ms", type=float, default=None,
                    help="default per-request deadline from submit; expired "
                         "requests finish with finish_reason='timeout'")
+    p.add_argument("--health-every", type=int, default=64,
+                   help="print Engine.health() (and refresh --metrics-dir) "
+                        "every N engine steps while serving (0 = exit-only)")
+    p.add_argument("--metrics-dir", default="",
+                   help="write Prometheus exposition + JSON metric snapshots "
+                        "here (refreshed on the --health-every cadence)")
+    p.add_argument("--trace", default="", dest="trace_path",
+                   help="write the request-lifecycle JSONL trace to this "
+                        "path at exit")
+    p.add_argument("--profile", default="",
+                   help="capture a jax.profiler trace of the serving run "
+                        "into this directory (also enables the engine's "
+                        "step annotations/timers)")
     a = p.parse_args()
 
     cfg = get_smoke_config(a.arch) if a.smoke else get_config(a.arch)
@@ -196,8 +261,15 @@ def main() -> None:
             max_queue=a.max_queue, preempt=a.preempt,
             deadline_ms=a.deadline_ms,
         )
-        serve_continuous(model, params, sc, gen=a.gen,
-                         prompt_len=a.prompt_len, requests=a.requests)
+        from repro.obs.profile import trace_ctx
+
+        with trace_ctx(a.profile):
+            serve_continuous(model, params, sc, gen=a.gen,
+                             prompt_len=a.prompt_len, requests=a.requests,
+                             health_every=a.health_every,
+                             metrics_dir=a.metrics_dir,
+                             trace_path=a.trace_path,
+                             profile=bool(a.profile))
         return
     rng = np.random.default_rng(0)
     batch = {

@@ -11,6 +11,11 @@ than one device is present (a real mesh, or CPU simulation via
 constructs a (data, model) mesh and the Trainer runs the sharded train
 step; ``--mesh 4x2`` pins the shape explicitly, ``--mesh none`` forces the
 single-device path.
+
+Telemetry: ``--metrics-dir DIR`` feeds the unified registry
+(``repro.obs``) and refreshes a Prometheus exposition + JSON snapshot
+there at every log flush; ``--profile DIR`` captures a ``jax.profiler``
+trace of the whole run and prints the host-side per-phase step timer.
 """
 from __future__ import annotations
 
@@ -100,6 +105,12 @@ def main() -> None:
                    help="checkpoint dir to resume from, or 'auto' = latest "
                         "step_* under --ckpt-dir")
     p.add_argument("--history-out", default="")
+    p.add_argument("--metrics-dir", default="",
+                   help="write Prometheus exposition + JSON metric snapshots "
+                        "here (refreshed every log flush via a trainer hook)")
+    p.add_argument("--profile", default="",
+                   help="capture a jax.profiler trace of the run into this "
+                        "directory (also enables step annotations/timers)")
     a = p.parse_args()
 
     cfg = get_smoke_config(a.arch) if a.smoke else get_config(a.arch)
@@ -125,8 +136,30 @@ def main() -> None:
     if resume == "auto":
         resume = ckpt.latest_step(a.ckpt_dir) or ""
         print(f"resume: {resume or '(no checkpoint found — cold start)'}")
-    trainer = Trainer(model, tc)
-    state, history = trainer.run(batches, resume_from=resume or None)
+    from repro.obs import MetricsRegistry, trace_ctx
+
+    reg = MetricsRegistry() if a.metrics_dir else None
+    hooks = []
+    if reg is not None:
+        import os
+
+        os.makedirs(a.metrics_dir, exist_ok=True)
+
+        def _dump(step, m, _reg=reg, _dir=a.metrics_dir):
+            # refreshed at every log flush: mid-run dashboards see live
+            # tokens/s / grad-norm, not just the final summary
+            _reg.write_prometheus(os.path.join(_dir, "train.prom"))
+            _reg.dump_json(os.path.join(_dir, "train_metrics.json"))
+
+        hooks.append(_dump)
+    trainer = Trainer(model, tc, hooks=hooks, metrics=reg,
+                      profile=bool(a.profile))
+    with trace_ctx(a.profile):
+        state, history = trainer.run(batches, resume_from=resume or None)
+    if a.profile and trainer.step_timer is not None:
+        print("step timer:")
+        for line in trainer.step_timer.report().splitlines():
+            print(f"  {line}")
     if a.history_out:
         with open(a.history_out, "w") as f:
             json.dump(history, f, indent=1)

@@ -1,0 +1,26 @@
+"""Unified telemetry: metrics registry, lifecycle tracing, profiling hooks.
+
+See ``obs/README.md`` for the metric catalog, trace event schema, and
+the launcher knobs (``--metrics-dir``, ``--trace``, ``--profile``)."""
+from repro.obs.metrics import (
+    LATENCY_BUCKETS,
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+)
+from repro.obs.profile import StepTimer, annotate, trace_ctx
+from repro.obs.trace import EVENTS, TraceRecorder
+
+__all__ = [
+    "LATENCY_BUCKETS",
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "StepTimer",
+    "annotate",
+    "trace_ctx",
+    "EVENTS",
+    "TraceRecorder",
+]

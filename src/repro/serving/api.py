@@ -47,13 +47,22 @@ class Completion:
     ``"overloaded"`` (rejected at submit by the engine's bounded queue —
     the request never ran; retriable).  Degraded outcomes are data, not
     exceptions: one saturated engine must not turn a whole batch call
-    into a stack trace."""
+    into a stack trace.
+
+    Timings: ``ttft_s`` is ``None`` — not ``0.0`` — when no token was
+    ever produced (queued timeout, overload rejection, a first-token
+    quarantine): "instant first token" and "no first token" are
+    different facts, and SLO math must not average them together.
+    ``queue_wait_s`` (submit -> first slot admission) is reported
+    alongside, and is also ``None`` for requests that never reached a
+    slot."""
 
     index: int
     tokens: List[int]
     finish_reason: str
     logprobs: Optional[List[float]] = None
-    ttft_s: float = 0.0                   # submit -> first token (0 if none)
+    ttft_s: Optional[float] = None        # submit -> first token; None if none
+    queue_wait_s: Optional[float] = None  # submit -> admission; None if never
     latency_s: float = 0.0                # submit -> done
 
 
@@ -83,7 +92,9 @@ class LLM:
                  max_queue: int = 0, preempt: bool = False,
                  faults: Optional[Any] = None,
                  extra_batch: Optional[Dict[str, Any]] = None,
-                 default_params: Optional[SamplingParams] = None):
+                 default_params: Optional[SamplingParams] = None,
+                 metrics: Optional[Any] = None, trace: Optional[Any] = None,
+                 profile: bool = False, on_step: Optional[Any] = None):
         self.engine = Engine(
             model, params, slots=slots, max_len=max_len,
             extra_batch=extra_batch, cache_layout=cache_layout,
@@ -91,6 +102,7 @@ class LLM:
             bucket_prompts=bucket_prompts, prefix_cache=prefix_cache,
             prefill_chunk=prefill_chunk, max_queue=max_queue,
             preempt=preempt, faults=faults,
+            metrics=metrics, trace=trace, profile=profile, on_step=on_step,
         )
         self.default_params = default_params or SamplingParams()
         self._uid = 0
@@ -98,9 +110,12 @@ class LLM:
     @classmethod
     def from_config(cls, model, params, sc: ServeConfig, *,
                     slots: Optional[int] = None,
-                    extra_batch: Optional[Dict[str, Any]] = None) -> "LLM":
+                    extra_batch: Optional[Dict[str, Any]] = None,
+                    **kw) -> "LLM":
         """Build from a ``ServeConfig`` — its sampling knobs (temperature,
-        top_k, top_p, seed) become the default ``SamplingParams``."""
+        top_k, top_p, seed) become the default ``SamplingParams``.  Extra
+        keyword args (``metrics``, ``trace``, ``profile``, ``on_step``)
+        pass through to the constructor."""
         return cls(
             model, params,
             slots=slots if slots is not None else sc.batch_size,
@@ -112,6 +127,7 @@ class LLM:
                 temperature=sc.temperature, top_k=sc.top_k, top_p=sc.top_p,
                 seed=sc.seed, deadline_ms=sc.deadline_ms,
             ),
+            **kw,
         )
 
     # ---------------------------------------------------------- internals
@@ -182,7 +198,12 @@ class LLM:
             outs.append(Completion(
                 index=i, tokens=list(req.output or []),
                 finish_reason=req.finish_reason, logprobs=req.logprobs,
-                ttft_s=(req.t_first - req.t_submit) if req.t_first else 0.0,
+                # None, not 0.0, when no token / no admission ever
+                # happened — see the Completion docstring
+                ttft_s=(req.t_first - req.t_submit) if req.t_first else None,
+                queue_wait_s=(
+                    (req.t_admit - req.t_submit) if req.t_admit else None
+                ),
                 latency_s=req.t_done - req.t_submit,
             ))
         return outs

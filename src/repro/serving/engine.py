@@ -110,6 +110,23 @@ Fault tolerance (the request-lifecycle hardening pass):
     and the lifecycle counters; ``serving/faults.py`` injects
     deterministic fault schedules (NaN logits, allocator outages,
     crash-and-rebuild) through the ``faults=FaultPlan(...)`` hook.
+
+Unified telemetry (``repro.obs``): pass ``metrics=MetricsRegistry()``
+and every lifecycle counter, the watchdog, queue/slot/page gauges and
+the TTFT / ITL / queue-wait / e2e-latency histograms become
+registry-backed (``health()`` counters and the registry agree by
+construction — both go through :meth:`_bump`); pass
+``trace=TraceRecorder()`` and every lifecycle transition emits one
+structured event stamped by the engine's injectable clock, so a seeded
+fault run yields a byte-identical JSONL trace.  Both hooks are
+host-side appends on paths the engine already walks: the
+one-bulk-transfer-per-step contract is unchanged (transfer-guard
+asserted in ``tests/test_obs.py``) and the measured tok/s overhead is
+bounded <2% in ``benchmarks/serving_bench.py``.  ``profile=True`` wraps
+the jitted prefill/decode dispatches in ``jax.profiler`` annotations
+and accumulates per-phase host timings in ``Engine.step_timer``;
+``on_step`` is a per-step callback the launchers use for periodic
+health/exposition emission.
 """
 from __future__ import annotations
 
@@ -130,6 +147,9 @@ from repro.serving.paged_cache import (
     pages_for,
     write_slot_paged,
 )
+from repro.obs.metrics import LATENCY_BUCKETS, MetricsRegistry
+from repro.obs.profile import StepTimer, annotate
+from repro.obs.trace import TraceRecorder
 from repro.serving.sampling import SamplingParams, StopChecker, effective_params
 
 
@@ -194,6 +214,7 @@ class Request:
     finish_reason: str = ""
     preempted: int = 0                       # times evicted-and-requeued
     t_submit: float = 0.0
+    t_admit: float = 0.0         # first admission to a slot (0 = never ran)
     t_first: float = 0.0
     t_done: float = 0.0
     _seq: int = -1                           # submit order (engine-assigned)
@@ -217,7 +238,11 @@ class Engine:
                  prefix_cache: bool = False, prefill_chunk: int = 0,
                  max_queue: int = 0, preempt: bool = False,
                  faults: Optional[Any] = None,
-                 clock: Callable[[], float] = time.time):
+                 clock: Callable[[], float] = time.time,
+                 metrics: Optional[MetricsRegistry] = None,
+                 trace: Optional[TraceRecorder] = None,
+                 profile: bool = False,
+                 on_step: Optional[Callable[["Engine"], None]] = None):
         self.model = model
         self.params = params
         self.B = slots
@@ -308,6 +333,58 @@ class Engine:
             "submitted": 0, "completed": 0, "rejected": 0, "timeouts": 0,
             "errors": 0, "cancelled": 0, "preempted": 0, "resumed": 0,
         }
+
+        # unified telemetry (repro.obs): every counter bump goes through
+        # _bump so the registry and health() can never disagree; the
+        # latency histograms observe host floats the engine already
+        # computes, and the lifecycle tracer is stamped by self._clock —
+        # all host-side appends, nothing touches the device hot loop.
+        self.metrics = metrics
+        self.trace = trace
+        self.profile = bool(profile)
+        self.step_timer = StepTimer() if self.profile else None
+        self.on_step = on_step
+        if metrics is not None:
+            fam = metrics.counter(
+                "engine_requests_total",
+                "request lifecycle transitions by event", labels=("event",),
+            )
+            self._mc = {k: fam.labels(k) for k in self.counters}
+            self._g = {
+                name: metrics.gauge(f"engine_{name}", help)
+                for name, help in (
+                    ("queue_depth", "requests waiting for admission"),
+                    ("active_slots", "slots holding an in-flight request"),
+                    ("prefilling", "slots mid incremental prefill"),
+                    ("free_pages", "KV pool pages on the free list"),
+                    ("steps_since_progress",
+                     "watchdog: engine steps since any request advanced"),
+                )
+            }
+            self._c_steps = metrics.counter(
+                "engine_steps_total", "engine scheduler iterations"
+            )
+            self._c_toks = metrics.counter(
+                "engine_tokens_total", "generated tokens across all requests"
+            )
+            self._h_ttft = metrics.histogram(
+                "engine_ttft_seconds", "submit -> first token",
+                buckets=LATENCY_BUCKETS,
+            )
+            self._h_itl = metrics.histogram(
+                "engine_itl_seconds", "per-request mean inter-token latency",
+                buckets=LATENCY_BUCKETS,
+            )
+            self._h_queue = metrics.histogram(
+                "engine_queue_wait_seconds", "submit -> slot admission",
+                buckets=LATENCY_BUCKETS,
+            )
+            self._h_e2e = metrics.histogram(
+                "engine_e2e_latency_seconds", "submit -> finish",
+                buckets=LATENCY_BUCKETS,
+            )
+        else:
+            self._mc = None
 
         # per-slot sampling state.  The numeric params live on DEVICE
         # ((B,) vectors consumed by the fused sampler inside the jitted
@@ -424,6 +501,39 @@ class Engine:
         self._chunk = jax.jit(model.prefill_chunk, donate_argnums=(1,))
         self._copy = jax.jit(copy_pages, donate_argnums=(0,))
 
+    # ---------------------------------------------------------- telemetry
+    def _bump(self, name: str, n: int = 1) -> None:
+        """Advance a lifecycle counter in BOTH the health() dict and the
+        metrics registry — one call site per transition, so the two views
+        cannot drift (parity asserted across chaos plans in
+        tests/test_obs.py)."""
+        self.counters[name] += n
+        if self._mc is not None:
+            self._mc[name].inc(n)
+
+    def _emit(self, event: str, req: Optional[Request] = None,
+              ts: Optional[float] = None, **data) -> None:
+        """Record one lifecycle trace event, stamped by the engine's
+        injectable clock (deterministic under a fake clock)."""
+        if self.trace is None:
+            return
+        self.trace.emit(
+            event,
+            ts=self._clock() if ts is None else ts,
+            uid=req.uid if req is not None else -1,
+            step=self.steps,
+            **data,
+        )
+
+    def _observe_gauges(self) -> None:
+        g = self._g
+        g["queue_depth"].set(len(self.queue))
+        g["active_slots"].set(sum(r is not None for r in self.slot_req))
+        g["prefilling"].set(len(self._prefilling))
+        if self.alloc is not None:
+            g["free_pages"].set(self.alloc.free_pages)
+        g["steps_since_progress"].set(self._steps_since_progress)
+
     # -------------------------------------------------------------- admin
     def submit(self, req: Request) -> None:
         if req.params is not None and req.params.max_new is not None:
@@ -460,13 +570,19 @@ class Engine:
         # caller to back off and try again.  Internal re-queues (preempted
         # requests) bypass submit and may transiently exceed the bound.
         if self.max_queue and len(self.queue) >= self.max_queue:
-            self.counters["rejected"] += 1
+            self._bump("rejected")
+            self._emit("overload_reject", req, queue_depth=len(self.queue),
+                       max_queue=self.max_queue)
             raise EngineOverloaded(req.uid, len(self.queue), self.max_queue)
         req.t_submit = self._clock()
         req._seq = self._next_seq
         self._next_seq += 1
-        self.counters["submitted"] += 1
+        self._bump("submitted")
         self.queue.append(req)
+        self._emit("submit", req, ts=req.t_submit,
+                   prompt_tokens=len(req.prompt), max_new=req.max_new)
+        self._emit("queued", req, ts=req.t_submit,
+                   queue_depth=len(self.queue))
 
     def _bucket(self, n: int) -> int:
         """Pad a prompt/chunk length to a power-of-2 bucket (min 8, capped
@@ -533,6 +649,12 @@ class Engine:
         self.slot_deadline[slot] = self._abs_deadline(req)
         self._admit_order[slot] = self._admit_counter
         self._admit_counter += 1
+        first_admission = req.t_admit == 0.0
+        req.t_admit = self._clock()
+        if self.metrics is not None and first_admission:
+            # queue wait = time to FIRST admission; a preempted request's
+            # re-admission is scheduler churn, not queueing delay
+            self._h_queue.observe(req.t_admit - req.t_submit)
 
     def _abs_deadline(self, req: Request) -> Optional[float]:
         if req.deadline_ms is None:
@@ -566,6 +688,7 @@ class Engine:
         if bool(bad):
             # poisoned prefill logits: quarantine this slot only
             req.finish_reason = "error"
+            self._emit("quarantine", req, slot=slot, where="prefill")
             self._finish(slot)
             return
         t0 = int(nxt[0])
@@ -573,14 +696,21 @@ class Engine:
             req.output = [t0]
             req.logprobs = [float(lp[0])] if sp.logprobs else None
             req.t_first = self._clock()
+            if self.metrics is not None:
+                self._h_ttft.observe(req.t_first - req.t_submit)
+            self._emit("decode", req, ts=req.t_first, slot=slot,
+                       ttft_s=req.t_first - req.t_submit)
         else:
             # preempted request resuming: the replayed prefill re-derived
             # the logits its next token would have seen, and gen0 keys
             # the same PRNG draw — the token stream continues exactly
-            self.counters["resumed"] += 1
+            self._bump("resumed")
+            self._emit("resume", req, slot=slot, replayed_tokens=gen0)
             req.output.append(t0)
             if req.logprobs is not None:
                 req.logprobs.append(float(lp[0]))
+        if self.metrics is not None:
+            self._c_toks.inc()
         self.slot_left[slot] = req.max_new - len(req.output)
         fin = self.slot_stop[slot].check(req.output, self.slot_left[slot])
         if fin:
@@ -621,7 +751,9 @@ class Engine:
         PRNG replays the remaining tokens identically."""
         req = self.slot_req[slot]
         req.preempted += 1
-        self.counters["preempted"] += 1
+        self._bump("preempted")
+        self._emit("preempt", req, slot=slot,
+                   generated_tokens=len(req.output or []))
         self.slot_req[slot] = None
         self.slot_left[slot] = 0
         self.slot_sp[slot] = None
@@ -702,6 +834,8 @@ class Engine:
                     )
                 self.slot_req[slot] = req
                 self._set_slot_params(slot, req)
+                self._emit("prefill", req, ts=req.t_admit, slot=slot,
+                           prompt_tokens=L, cached_tokens=plan.cached_tokens)
                 self._prefill_state[slot] = _Prefill(
                     req=req, prompt=pp, done=plan.cached_tokens
                 )
@@ -723,7 +857,8 @@ class Engine:
             for k, v in self.extra.items():
                 batch[k] = v
             Lx = L + self.n_front          # valid decoder-input tokens
-            logits, one_cache = self._prefill(self.params, batch, Lx)
+            with annotate("engine/prefill", enabled=self.profile):
+                logits, one_cache = self._prefill(self.params, batch, Lx)
             if self.alloc is not None:
                 pages = self.alloc.alloc(slot, need)
                 page = self.alloc.page_size
@@ -733,6 +868,8 @@ class Engine:
                 self._write_slot(slot, one_cache, int(one_cache["pos"]))
             self.slot_req[slot] = req
             self._set_slot_params(slot, req)
+            self._emit("prefill", req, ts=req.t_admit, slot=slot,
+                       prompt_tokens=L, cached_tokens=0)
             self._progress = True
             self._emit_first(slot, logits)
 
@@ -780,7 +917,9 @@ class Engine:
                 del self.queue[i]
                 req.finish_reason = "cancelled"
                 req.t_done = self._clock()
-                self.counters["cancelled"] += 1
+                self._bump("cancelled")
+                self._emit("finish", req, ts=req.t_done,
+                           reason="cancelled", tokens=len(req.output or []))
                 self.done.append(req)
                 return
         for slot in range(self.B):
@@ -798,14 +937,23 @@ class Engine:
             req.finish_reason = "length"
         reason = req.finish_reason
         if reason == "timeout":
-            self.counters["timeouts"] += 1
+            self._bump("timeouts")
         elif reason == "error":
-            self.counters["errors"] += 1
+            self._bump("errors")
         elif reason == "cancelled":
-            self.counters["cancelled"] += 1
+            self._bump("cancelled")
         else:
-            self.counters["completed"] += 1
+            self._bump("completed")
         req.t_done = self._clock()
+        n_out = len(req.output or [])
+        if self.metrics is not None:
+            self._h_e2e.observe(req.t_done - req.t_submit)
+            if req.t_first and n_out >= 2:
+                self._h_itl.observe(
+                    (req.t_done - req.t_first) / (n_out - 1)
+                )
+        self._emit("finish", req, ts=req.t_done, slot=slot,
+                   reason=reason, tokens=n_out)
         self.done.append(req)
         self.slot_req[slot] = None
         self.slot_left[slot] = 0
@@ -836,7 +984,9 @@ class Engine:
             if dl is not None and now >= dl:
                 req.finish_reason = "timeout"
                 req.t_done = now
-                self.counters["timeouts"] += 1
+                self._bump("timeouts")
+                self._emit("timeout", req, ts=now, where="queue")
+                self._emit("finish", req, ts=now, reason="timeout", tokens=0)
                 self.done.append(req)
             else:
                 kept.append(req)
@@ -859,6 +1009,8 @@ class Engine:
                     # _push_table in _finish re-derives the mask
                     pass
             self.slot_req[s].finish_reason = "timeout"
+            self._emit("timeout", self.slot_req[s], ts=now, where="in_flight",
+                       slot=s)
             self._finish(s)
 
     # --------------------------------------------------------------- step
@@ -904,11 +1056,23 @@ class Engine:
                 v = np.zeros((self.B,), bool)
                 v[bad_slots] = True
                 inject = jnp.asarray(v)
-            tok_d, logp_d, bad_d, self.cache, self._samp = self._decode(
-                self.params, self.cache, self._last_tok, self._samp, inject
-            )
-            self._last_tok = tok_d
-            nxt, logps, bads = jax.device_get((tok_d, logp_d, bad_d))
+            if self.step_timer is not None:
+                with self.step_timer.span("decode"), \
+                        annotate("engine/decode", enabled=True):
+                    tok_d, logp_d, bad_d, self.cache, self._samp = \
+                        self._decode(self.params, self.cache,
+                                     self._last_tok, self._samp, inject)
+                with self.step_timer.span("host_sync"):
+                    self._last_tok = tok_d
+                    nxt, logps, bads = jax.device_get((tok_d, logp_d, bad_d))
+            else:
+                tok_d, logp_d, bad_d, self.cache, self._samp = self._decode(
+                    self.params, self.cache, self._last_tok, self._samp,
+                    inject
+                )
+                self._last_tok = tok_d
+                nxt, logps, bads = jax.device_get((tok_d, logp_d, bad_d))
+            emitted = 0
             for s in active:
                 req = self.slot_req[s]
                 if bads[s]:
@@ -916,10 +1080,12 @@ class Engine:
                     # (drop the garbage token) and leave every other
                     # slot's sampled token untouched
                     req.finish_reason = "error"
+                    self._emit("quarantine", req, slot=s, where="decode")
                     self._finish(s)
                     continue
                 t = int(nxt[s])
                 req.output.append(t)
+                emitted += 1
                 if req.logprobs is not None:
                     req.logprobs.append(float(logps[s]))
                 self.slot_left[s] -= 1
@@ -927,11 +1093,18 @@ class Engine:
                 if fin:
                     req.finish_reason = fin
                     self._finish(s)
+            if self.metrics is not None and emitted:
+                self._c_toks.inc(emitted)
         self._expire_in_flight()
         if active or self._progress or len(self.done) != done0:
             self._steps_since_progress = 0
         else:
             self._steps_since_progress += 1
+        if self.metrics is not None:
+            self._c_steps.inc()
+            self._observe_gauges()
+        if self.on_step is not None:
+            self.on_step(self)
         return len(active)
 
     # -------------------------------------------------------------- health

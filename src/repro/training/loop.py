@@ -14,6 +14,15 @@
   * async metrics — per-step metrics stay on device; ONE bulk
     ``jax.device_get`` per log interval and no implicit transfers in the
     steady state (transfer-guard tested like the serving engine)
+  * unified telemetry — pass ``metrics=MetricsRegistry()`` (``repro.obs``)
+    and the log-interval flush also feeds the shared registry
+    (tokens/s, step-time histogram, grad-norm, loss, skipped-step
+    counters): the serving engine and the trainer then report through
+    one exposition surface.  Registry writes consume only the values
+    the flush already fetched, so the transfer contract is untouched.
+    ``profile=True`` wraps the jitted step dispatch in a
+    ``jax.profiler`` annotation and accumulates host-side per-phase
+    timings in ``Trainer.step_timer``
   * resumable checkpoints — the FULL TrainState (params + AdamW moments +
     optimizer step) plus the data-iterator cursor; ``resume_from``
     reproduces the uninterrupted run bit-exactly
@@ -34,6 +43,8 @@ import numpy as np
 from repro.checkpoint import ckpt
 from repro.core.config import TrainConfig
 from repro.models.model import Model
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.profile import StepTimer, annotate
 from repro.training import train_step as TS
 from repro.training.train_step import TrainState
 
@@ -116,6 +127,8 @@ class Trainer:
         verbose: bool = True,
         peak_flops: Optional[float] = None,
         prefetch: int = 2,
+        metrics: Optional[MetricsRegistry] = None,
+        profile: bool = False,
     ):
         self.model, self.tc = model, tc
         mesh = model.ctx.mesh
@@ -141,6 +154,36 @@ class Trainer:
         self._skip_streak = 0
         self._it: Optional[_DevicePrefetch] = None
         self._t0 = self._t_log = 0.0
+
+        # unified telemetry (repro.obs): registry series are fed at the
+        # log-interval flush from values the ONE bulk device_get already
+        # fetched — no extra transfers, no per-step host work
+        self.metrics = metrics
+        self.profile = bool(profile)
+        self.step_timer = StepTimer() if self.profile else None
+        if metrics is not None:
+            self._c_steps = metrics.counter(
+                "train_steps_total", "optimizer steps completed"
+            )
+            self._c_tokens = metrics.counter(
+                "train_tokens_total", "non-pad tokens consumed"
+            )
+            self._c_skipped = metrics.counter(
+                "train_skipped_steps_total",
+                "updates withheld for non-finite loss/grads",
+            )
+            self._h_step = metrics.histogram(
+                "train_step_time_seconds", "mean step wall per log interval"
+            )
+            self._tg = {
+                name: metrics.gauge(f"train_{name}", help)
+                for name, help in (
+                    ("loss", "last flushed total loss"),
+                    ("grad_norm", "last flushed global gradient norm"),
+                    ("tokens_per_sec", "interval throughput"),
+                    ("lr", "current learning rate"),
+                )
+            }
 
     # ------------------------------------------------------------ placement
     def _place(self, batch):
@@ -215,7 +258,12 @@ class Trainer:
         batch = next(self._it)
         if self._compiled is None:
             self._build_compiled(batch)
-        self.state, metrics = self._compiled(self.state, batch)
+        if self.step_timer is not None:
+            with self.step_timer.span("train_step"), \
+                    annotate("train/step", enabled=True):
+                self.state, metrics = self._compiled(self.state, batch)
+        else:
+            self.state, metrics = self._compiled(self.state, batch)
         s = self.step_idx
         self.step_idx = s + 1
         self._pending.append(metrics)
@@ -247,6 +295,8 @@ class Trainer:
             if float(fm.get("skipped", 0.0)) > 0.0:
                 self.skipped_total += 1
                 self._skip_streak += 1
+                if self.metrics is not None:
+                    self._c_skipped.inc()
                 if self._skip_streak >= max(self.tc.max_nonfinite_skips, 1):
                     raise NonFiniteLossError(
                         s - n + 1 + i, self._skip_streak
@@ -272,6 +322,15 @@ class Trainer:
                 ) / self.hlo_cost["flops"]
             if self.peak_flops:
                 m["mfu"] = self._model_flops / step_time / self.peak_flops
+        if self.metrics is not None:
+            # registry feed: everything below is already host-side (the
+            # single bulk fetch above) — zero extra device traffic
+            self._c_steps.inc(n)
+            self._c_tokens.inc(tokens)
+            self._h_step.observe(step_time)
+            for name in ("loss", "grad_norm", "tokens_per_sec", "lr"):
+                if name in m:
+                    self._tg[name].set(m[name])
         self.history.append(m)
         if self.verbose:
             skips = f"  SKIPPED {self.skipped_total}" if self.skipped_total else ""

@@ -405,7 +405,10 @@ def test_llm_surfaces_overload_and_timeout_as_outcomes():
     assert reasons.count("length") == 2
     for c in outs:
         if c.finish_reason == "overloaded":
-            assert c.tokens == [] and c.ttft_s == 0.0
+            # never produced a token / never reached a slot: timings are
+            # explicitly None, not a fake 0.0
+            assert c.tokens == [] and c.ttft_s is None
+            assert c.queue_wait_s is None
         else:
             assert len(c.tokens) == 3
     # the engine is still healthy for the next call
