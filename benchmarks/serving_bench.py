@@ -37,17 +37,96 @@ Four measurements:
     chaos pass (NaN injection + allocator outage) then must drain with
     survivors token-identical to the fault-free engine.
 
+  * sharded-serving scaling workload — the SAME paged workload served
+    tensor-parallel on (1, N) meshes for N in 1/4/8 virtual CPU devices
+    (``xla_force_host_platform_device_count``, one subprocess per N —
+    the device-count flag must be set before jax initializes, mirroring
+    the PR 5 ``train-distributed`` harness).  Per-token output parity of
+    every mesh run against the single-device run is ASSERTED — the
+    tentpole guarantee that sharding the K/V storage changes where bytes
+    live, never what tokens come out.  tok/s per mesh size is reported;
+    on virtual devices all shards share the same cores, so the numbers
+    prove the mechanism (the sharded engine pays no per-step reshard or
+    extra host sync), not a speedup — on real accelerators the model
+    axis is what fits 35B+ configs at all.
+
 CPU numbers prove the mechanism (data volume per token write, prompt
 rows not recomputed); on TPU the same ratios show up as HBM traffic per
 decode step and MXU time per admitted prompt.
 """
 from __future__ import annotations
 
+import json
+import os
+import subprocess
+import sys
+import textwrap
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+_SCALING_CODE = textwrap.dedent("""
+    import json, time
+    import jax, numpy as np
+    from repro.configs import get_smoke_config
+    from repro.core.config import ParallelConfig
+    from repro.models.model import build_model
+    from repro.serving.engine import Engine, Request
+
+    mesh_shape = __MESH_SHAPE__
+    mesh = (jax.make_mesh(mesh_shape, ("data", "model"))
+            if mesh_shape is not None else None)
+    cfg = get_smoke_config("qwen2-7b")
+    model = build_model(cfg, ParallelConfig(), mesh)
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompts = [
+        rng.integers(5, cfg.vocab_size, size=int(rng.integers(4, 32)))
+        .astype(np.int32)
+        for _ in range(8)
+    ]
+
+    def serve_pass():
+        eng = Engine(model, params, slots=4, max_len=64,
+                     cache_layout="paged", page_size=16)
+        for i, p in enumerate(prompts):
+            eng.submit(Request(uid=i, prompt=p, max_new=16))
+        t0 = time.time()
+        eng.run()
+        wall = time.time() - t0
+        outs = {r.uid: list(r.output) for r in eng.done}
+        return outs, sum(len(o) for o in outs.values()) / wall
+
+    serve_pass()                      # warm the jit caches
+    best = 0.0
+    for _ in range(3):
+        outs, tps = serve_pass()
+        best = max(best, tps)
+    print("RESULT " + json.dumps({"outs": outs, "tok_s": best}))
+""")
+
+
+def _scaling_run(n_dev: int, mesh_shape=None):
+    """Serve the scaling workload on `n_dev` virtual devices (subprocess:
+    the XLA device-count flag must be set before jax initializes).
+
+    ``mesh_shape`` is the (data, model) mesh; the model axis must divide
+    the smoke config's 4 attention heads, so 8 devices run as (2, 4)."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_dev}"
+    env["JAX_PLATFORMS"] = "cpu"
+    out = subprocess.run(
+        [sys.executable, "-c",
+         _SCALING_CODE.replace("__MESH_SHAPE__", repr(mesh_shape))],
+        capture_output=True, text=True, env=env, timeout=900,
+    )
+    assert out.returncode == 0, (
+        f"scaling run on {n_dev} devices failed:\n{out.stderr[-4000:]}"
+    )
+    line = [l for l in out.stdout.splitlines() if l.startswith("RESULT ")][-1]
+    return json.loads(line[len("RESULT "):])
 
 
 def _run_pass(eng, prompts, max_new, make_params=None):
@@ -443,6 +522,29 @@ def run(report):
     report("serving/chaos_seeded_drain", chaos_wall * 1e6,
            f"errors={counters['errors']} survivors={len(survivors)}/8 "
            "token-parity ok")
+
+    # ------------------------------------- sharded-serving scaling
+    # one subprocess per device count (the XLA virtual-device flag must
+    # be set before jax initializes); per-token parity of every mesh run
+    # against the 1-device run is the acceptance assertion — tok/s across
+    # 1 -> 8 virtual devices is reported for the trajectory.
+    base = _scaling_run(1)
+    for n_dev, mesh_shape in ((4, (1, 4)), (8, (2, 4))):
+        res = _scaling_run(n_dev, mesh_shape)
+        assert res["outs"] == base["outs"], (
+            f"{mesh_shape} mesh diverged from single-device output"
+        )
+        report(
+            f"serving/scaling_{n_dev}dev",
+            1e6 / max(res["tok_s"], 1e-9),
+            f"tok/s={res['tok_s']:.1f} vs 1dev={base['tok_s']:.1f} "
+            f"{mesh_shape} mesh, per-token parity asserted; virtual "
+            "devices share cores — mechanism proof, not speedup",
+        )
+    report(
+        "serving/scaling_1dev", 1e6 / max(base["tok_s"], 1e-9),
+        f"tok/s={base['tok_s']:.1f} single-device reference",
+    )
 
 
 if __name__ == "__main__":

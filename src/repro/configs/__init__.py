@@ -3,6 +3,16 @@
 Every config cites its source in ``citation``.  ``get_config(name)`` returns
 the full config; ``get_smoke_config(name)`` the reduced same-family variant
 used by CPU smoke tests.
+
+Serving the large end of the zoo needs the mesh: at serving precision no
+single device holds the weights + KV pool of ``llama3-405b``,
+``llama4-maverick-400b-a17b``, ``jamba-1.5-large-398b``,
+``command-r-35b``, ``qwen1.5-32b``, ``internvl2-26b``, or (for big-batch
+embedding extraction) ``esm2-3b``.  Tensor-parallel serving
+(``launch/serve.py --mesh DxM``; ``serving/README.md`` §"Sharded
+serving") shards their attention/FFN weights and paged KV pools over the
+``model`` axis, which is what makes those ``--arch`` ids servable rather
+than config-only entries.
 """
 from __future__ import annotations
 

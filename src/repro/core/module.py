@@ -16,6 +16,7 @@ Logical axis vocabulary (mapped to mesh axes by ``repro.parallel.sharding``):
 from __future__ import annotations
 
 import math
+import zlib
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, Optional, Tuple, Union
 
@@ -105,7 +106,10 @@ def materialize(defs: Any, key: jax.Array, param_dtype) -> Any:
         if isinstance(tree, P):
             k = key
             for name in path:
-                k = jax.random.fold_in(k, hash(name) % (2**31))
+                # zlib.crc32, NOT hash(): str hash is salted per process
+                # (PYTHONHASHSEED), which would make the "same" seed yield
+                # different weights in every subprocess / relaunch.
+                k = jax.random.fold_in(k, zlib.crc32(name.encode()) % (2**31))
             dt = jnp.dtype(tree.dtype) if tree.dtype else param_dtype
             return tree.initializer()(k, tree.shape, dt)
         return {k: build(v, path + (k,)) for k, v in tree.items()}

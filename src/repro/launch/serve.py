@@ -11,6 +11,13 @@ params (greedy by default — fused on-device sampling either way):
         --continuous --cache-layout paged --page-size 16 --requests 16 \
         --prefix-cache --prefill-chunk 32 --temperature 0.8 --top-k 40
 
+``--mesh DxM`` (e.g. ``--mesh 2x4``) serves tensor-parallel on a
+(data, model) device mesh: K/V storage shards over the model axis while
+the page allocator stays global, and per-request sampling is
+token-reproducible, so the output stream is identical to single-device
+(see serving/README.md "Sharded serving").  On CPU, virtual devices come
+from ``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
+
 Telemetry (``repro.obs``, see ``src/repro/obs/README.md``):
 ``--health-every N`` prints the engine health snapshot every N steps
 while serving (default 64 — a wedged engine is visible as the watchdog
@@ -213,6 +220,13 @@ def main() -> None:
                    help="sampling PRNG seed (request i uses seed+i)")
     p.add_argument("--continuous", action="store_true",
                    help="continuous-batching engine instead of a static batch")
+    p.add_argument("--mesh", default="",
+                   help="serve tensor-parallel on a DATAxMODEL device mesh, "
+                        "e.g. --mesh 2x4 (K/V storage shards over the model "
+                        "axis; sampling stays token-reproducible, so output "
+                        "is identical to single-device).  Requires "
+                        "data*model visible jax devices — on CPU set "
+                        "XLA_FLAGS=--xla_force_host_platform_device_count=N")
     p.add_argument("--cache-layout", choices=("dense", "paged"),
                    default="dense")
     p.add_argument("--page-size", type=int, default=16)
@@ -248,7 +262,20 @@ def main() -> None:
     a = p.parse_args()
 
     cfg = get_smoke_config(a.arch) if a.smoke else get_config(a.arch)
-    model = build_model(cfg, ParallelConfig(), None)
+    mesh = None
+    if a.mesh:
+        try:
+            d, m = (int(x) for x in a.mesh.lower().split("x"))
+        except ValueError:
+            raise SystemExit(f"--mesh wants DATAxMODEL (e.g. 2x4), got {a.mesh!r}")
+        if d * m > len(jax.devices()):
+            raise SystemExit(
+                f"--mesh {a.mesh} needs {d * m} devices, "
+                f"{len(jax.devices())} visible (on CPU set XLA_FLAGS="
+                f"--xla_force_host_platform_device_count={d * m})"
+            )
+        mesh = jax.make_mesh((d, m), ("data", "model"))
+    model = build_model(cfg, ParallelConfig(), mesh)
     params = model.init(jax.random.PRNGKey(0))
     if a.continuous:
         max_prompt = a.prompt_len * (2 if a.prefix_cache else 1)

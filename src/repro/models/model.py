@@ -18,7 +18,8 @@ from repro.core.precision import policy_for
 from repro.kernels import ops
 from repro.models import layers as L
 from repro.models import transformer as T
-from repro.parallel.sharding import ShardingCtx, null_ctx
+from repro.parallel.sharding import ShardingCtx, fit_spec, null_ctx
+from repro.parallel.sharding import spec as axis_spec
 
 
 class Model:
@@ -296,6 +297,14 @@ class Model:
         ``layout="paged"`` builds shared K/V page pools plus a top-level
         ``block_table`` (all-null-page) the serving engine's allocator
         maintains; ``pos`` is per-slot ``(batch,)`` in that layout.
+
+        The cache is built with implicit (single-device) placement even
+        when the model carries a mesh ``ShardingCtx`` — this function is
+        also called under ``jax.eval_shape`` (launch/shapes.dryrun_bundle)
+        where no buffers may be materialized.  Mesh consumers place it
+        explicitly via ``cache_shardings``: the serving engine device_puts
+        the tree once at construction and pins every per-step jit to the
+        same specs.
         """
         if layout == "paged":
             if page_size <= 0 or num_pages <= 1:
@@ -316,6 +325,62 @@ class Model:
             ),
             "pos": jnp.int32(0),
         }
+
+    def cache_specs(self, cache):
+        """``PartitionSpec`` tree for a decode cache (same structure as
+        ``cache`` — works on concrete arrays or ``jax.eval_shape`` output).
+
+        Mirrors the constraints the layers apply internally
+        (models/attention.py, models/ssm.py) so the serving engine can pin
+        jit ``in_shardings``/``out_shardings`` without inserting reshard
+        collectives into the per-token step: paged ``k_pool``/``v_pool``
+        shard over the KV-head (``model``) axis — one logical cache,
+        sharded storage — dense K/V over (``cache_batch``,
+        ``cache_seq``), SSM state/conv over ``tp``.  The block table and
+        positions are host-maintained control state and stay replicated,
+        as does the (write-once, batch-1-inserted) cross-attention KV.
+        Mesh axes that do not evenly divide a dim are dropped per-dim:
+        placement shardings must divide exactly, unlike
+        ``with_sharding_constraint``.
+        """
+        from jax.sharding import PartitionSpec
+
+        ctx = self.ctx
+        logical = {
+            # (units, P, page, Hkv, D): shared page pools, head-sharded
+            "k_pool": (None, None, None, "kv_tp", None),
+            "v_pool": (None, None, None, "kv_tp", None),
+            # (units, B, T, Hkv, D): dense per-slot KV
+            "k": (None, "cache_batch", "cache_seq"),
+            "v": (None, "cache_batch", "cache_seq"),
+            # (units, B, H, P, N) / (units, B, kw-1, conv_dim)
+            "state": (None, "cache_batch", "tp"),
+            "conv": (None, "cache_batch", None, "tp"),
+        }
+
+        def walk(tree, keys=()):
+            if isinstance(tree, dict):
+                return {k: walk(v, keys + (k,)) for k, v in tree.items()}
+            if ctx.mesh is None:
+                return PartitionSpec()
+            name = keys[-1] if keys else ""
+            axes = () if "xattn" in keys else logical.get(name, ())
+            ps = axis_spec(ctx.rules, *axes)
+            return fit_spec(tree.shape, ctx.mesh, ps)
+
+        return walk(cache)
+
+    def cache_shardings(self, cache):
+        """``NamedSharding`` tree for a decode cache, or ``None`` when the
+        model is off-mesh (single-device: placement stays implicit)."""
+        from jax.sharding import NamedSharding
+
+        mesh = self.ctx.mesh
+        if mesh is None:
+            return None
+        return jax.tree.map(
+            lambda s: NamedSharding(mesh, s), self.cache_specs(cache)
+        )
 
     # -------------------------------------------------------------- utils
     def _pad_caches(self, caches, S: int, max_len: int):

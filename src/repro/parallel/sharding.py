@@ -14,7 +14,13 @@ Consumers of these rules span both halves of the system:
     is asserted in tests/test_trainer_distributed.py (8-virtual-device
     CPU mesh) and tests/test_parallel_numerics.py.
   * serving / dry-run — ``launch/shapes.dryrun_bundle`` shards the
-    prefill/decode entry points for the 256/512-chip compile-only sweep.
+    prefill/decode entry points for the 256/512-chip compile-only sweep,
+    and ``serving/engine.Engine`` runs tensor-parallel inference end to
+    end: ``Model.cache_specs`` (built from these rules) pins the
+    in/out shardings of every per-step jit so the paged K/V pools shard
+    over the head (``model``) axis while the host-side page allocator
+    stays global — parity with the single-device engine is asserted in
+    tests/test_serving_sharded.py on (1,8) and (2,4) CPU meshes.
 
 Weight storage convention (uniform across archs — see DESIGN.md §5):
   * every large 2-D weight is stored (fsdp-dim, tp-dim) — combined FSDP+TP,
@@ -78,6 +84,31 @@ def spec(rules: Dict[str, Any], *logical: Optional[str]) -> PartitionSpec:
 
 def named(mesh: Mesh, pspec: PartitionSpec) -> NamedSharding:
     return NamedSharding(mesh, pspec)
+
+
+def fit_spec(shape, mesh: Mesh, pspec: PartitionSpec) -> PartitionSpec:
+    """Drop mesh axes that do not evenly divide their dimension.
+
+    ``with_sharding_constraint`` tolerates uneven dims (XLA pads), but
+    *placement* shardings — ``jax.device_put`` and jit ``in_shardings`` /
+    ``out_shardings`` — require exact divisibility.  Callers building
+    placement shardings for concrete buffers use this to degrade per-dim
+    to replication instead of erroring (e.g. 3 serving slots on a data=2
+    mesh axis keep the slot dim replicated while the KV heads of the same
+    cache still shard over ``model``)."""
+    sizes = mesh_axis_sizes(mesh)
+    phys = []
+    for dim, ax in zip(shape, tuple(pspec) + (None,) * len(shape)):
+        if ax is None:
+            phys.append(None)
+            continue
+        n = 1
+        for a in (ax if isinstance(ax, tuple) else (ax,)):
+            n *= sizes.get(a, 1)
+        phys.append(ax if dim % n == 0 else None)
+    while phys and phys[-1] is None:
+        phys.pop()
+    return PartitionSpec(*phys)
 
 
 def constrain(x, mesh: Mesh, pspec: PartitionSpec):

@@ -127,6 +127,24 @@ the jitted prefill/decode dispatches in ``jax.profiler`` annotations
 and accumulates per-phase host timings in ``Engine.step_timer``;
 ``on_step`` is a per-step callback the launchers use for periodic
 health/exposition emission.
+
+Sharded serving (tensor-parallel inference on the mesh):
+
+A model built with a multi-device mesh (``build_model(cfg, pc, mesh)``,
+``serve.py --mesh DxM``) makes the whole engine mesh-aware with no API
+change: the paged K/V pools (and dense K/V buffers) shard over the
+head/``model`` axis per :meth:`Model.cache_specs` while the host-side
+page allocator, refcounts and prefix-hash index stay global — one
+logical cache, sharded storage, so a page id means the same thing on
+every device and prefix sharing / COW semantics are mesh-invariant.
+Every jit below pins ``in_shardings``/``out_shardings`` to the canonical
+placement with donation intact, so the steady-state decode loop updates
+the sharded pools in place and keeps the one-bulk-transfer-per-step
+contract (re-asserted on the mesh in tests/test_serving_sharded.py).
+The fused sampler and the NaN sentinel consume the *replicated* logits
+row, so a request's token stream depends only on its seed + generation
+index: greedy and seeded-sampled outputs are token-identical across
+(1,), (1,8) and (2,4) meshes.
 """
 from __future__ import annotations
 
@@ -137,8 +155,10 @@ from typing import Any, Callable, Dict, List, Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec
 
 from repro.models.model import Model
+from repro.parallel.sharding import fit_spec
 from repro.kernels import ops
 from repro.serving.paged_cache import (
     NULL_PAGE,
@@ -309,6 +329,34 @@ class Engine:
         else:
             raise ValueError(f"unknown cache_layout {cache_layout!r}")
         cache["pos"] = jnp.zeros((slots,), jnp.int32)
+
+        # ---- tensor-parallel serving: canonical placement on the mesh.
+        # When the model carries a real multi-device mesh (build_model with
+        # --mesh), the K/V storage shards over the head/model axis per
+        # Model.cache_specs — one logical cache, sharded storage; the page
+        # allocator, refcounts and prefix-hash index below stay host-global
+        # and never learn about the mesh.  Params shard per param_specs
+        # (fitted: axes that don't divide a dim degrade to replication) and
+        # every per-slot control vector is replicated.  Off-mesh, placement
+        # stays implicit and the jits below compile exactly as before.
+        mesh = model.ctx.mesh
+        self.mesh = (
+            mesh if mesh is not None and not mesh.empty and mesh.size > 1
+            else None
+        )
+        if self.mesh is not None:
+            self._rep = NamedSharding(self.mesh, PartitionSpec())
+            self._sh_cache = model.cache_shardings(cache)
+            self._sh_params = jax.tree.map(
+                lambda p, s: NamedSharding(
+                    self.mesh, fit_spec(p.shape, self.mesh, s)
+                ),
+                params, model.param_specs(),
+            )
+            cache = jax.device_put(cache, self._sh_cache)
+            self.params = jax.device_put(params, self._sh_params)
+        else:
+            self._rep = self._sh_cache = self._sh_params = None
         self.cache = cache
         self.slot_req: List[Optional[Request]] = [None] * slots
         self.slot_left: np.ndarray = np.zeros((slots,), np.int32)
@@ -408,6 +456,12 @@ class Engine:
         # steady-state fault-injection vector (all clear) kept on device:
         # passing it adds no host->device traffic to the decode step
         self._no_inject = jnp.zeros((slots,), bool)
+        if self.mesh is not None:
+            # commit the control vectors replicated so the pinned jits
+            # below accept them without a placement mismatch
+            self._samp = jax.device_put(self._samp, self._rep)
+            self._last_tok = jax.device_put(self._last_tok, self._rep)
+            self._no_inject = jax.device_put(self._no_inject, self._rep)
 
         if bucket_prompts is None:
             bucket_prompts = paddable
@@ -432,6 +486,13 @@ class Engine:
             # positions (their writes touched no live data)
             cache["pos"] = jnp.where(samp["active"], cache["pos"], 0)
             row = logits[:, -1]
+            # sampler + sentinel consume the REPLICATED row: the head
+            # matmul may leave logits vocab-sharded on a mesh, and both
+            # the counter-hash PRNG draw and the isfinite reduction must
+            # see identical full rows on every device for a request's
+            # token stream to be independent of the mesh shape (off-mesh
+            # this constraint is a no-op)
+            row = model.ctx.cons(row, None, None)
             row = jnp.where(inject[:, None], jnp.float32(jnp.nan), row)
             bad = samp["active"] & ~jnp.all(jnp.isfinite(row), axis=-1)
             row = jnp.where(bad[:, None], 0.0, row)
@@ -462,6 +523,9 @@ class Engine:
             unpreempted run).  The same non-finite sentinel as the
             decode step guards the prefill logits."""
             row = logits[:, -1]
+            # same replication guarantee as the decode step: first-token
+            # sampling must be mesh-shape-independent too
+            row = model.ctx.cons(row, None, None)
             row = jnp.where(inject, jnp.float32(jnp.nan), row)
             bad = ~jnp.all(jnp.isfinite(row))
             row = jnp.where(bad, 0.0, row)
@@ -487,19 +551,71 @@ class Engine:
                 pos.at[slot].set(0),
             )
 
-        self._prefill = jax.jit(
-            lambda p, b, L: model.prefill(p, b, max_len, length=L)
-        )
         # the engine cache is serving steady state: donate it so XLA
         # updates pools/buffers in place instead of copying the whole
         # cache every decode step / prefill chunk / page insert (each
         # call consumes self.cache[...] and the engine reassigns it)
-        self._decode = jax.jit(_fused_step, donate_argnums=(1, 3))
-        self._admit_slot = jax.jit(_admit_slot, donate_argnums=(0, 1))
-        self._release_slot = jax.jit(_release_slot, donate_argnums=(0, 1))
-        self._insert_paged = jax.jit(write_slot_paged, donate_argnums=(0,))
-        self._chunk = jax.jit(model.prefill_chunk, donate_argnums=(1,))
-        self._copy = jax.jit(copy_pages, donate_argnums=(0,))
+        if self.mesh is None:
+            self._prefill = jax.jit(
+                lambda p, b, L: model.prefill(p, b, max_len, length=L)
+            )
+            self._decode = jax.jit(_fused_step, donate_argnums=(1, 3))
+            self._admit_slot = jax.jit(_admit_slot, donate_argnums=(0, 1))
+            self._release_slot = jax.jit(
+                _release_slot, donate_argnums=(0, 1)
+            )
+            self._insert_paged = jax.jit(
+                write_slot_paged, donate_argnums=(0,)
+            )
+            self._chunk = jax.jit(model.prefill_chunk, donate_argnums=(1,))
+            self._copy = jax.jit(copy_pages, donate_argnums=(0,))
+        else:
+            # mesh-aware jits: every dispatch pins its in/out shardings to
+            # the canonical placement (params per param_specs, cache per
+            # cache_specs, control state replicated).  jax rejects a
+            # committed arg whose sharding mismatches an explicit pin, so
+            # the pins PROVE the steady-state decode loop moves no data:
+            # every input already lives where the pin says, every output
+            # is produced there (donated sharded buffers update in
+            # place), and the only host traffic stays the one bulk
+            # device_get of the sampled (tok, logp, bad) triple.  The
+            # batch-1 prefill tree is replicated: it is O(max_len) small,
+            # and its slot insert then writes each pool shard locally.
+            rep = self._rep
+            csh, psh = self._sh_cache, self._sh_params
+            lsh = csh["layers"]
+            ssh = {k: rep for k in self._samp}
+            self._prefill = jax.jit(
+                lambda p, b, L: model.prefill(p, b, max_len, length=L),
+                in_shardings=(psh, rep, rep), out_shardings=rep,
+            )
+            self._decode = jax.jit(
+                _fused_step, donate_argnums=(1, 3),
+                in_shardings=(psh, csh, rep, ssh, rep),
+                out_shardings=(rep, rep, rep, csh, ssh),
+            )
+            self._admit_slot = jax.jit(
+                _admit_slot, donate_argnums=(0, 1),
+                in_shardings=(ssh,) + (rep,) * 9,
+                out_shardings=(rep, rep, rep, ssh, rep),
+            )
+            self._release_slot = jax.jit(
+                _release_slot, donate_argnums=(0, 1),
+                in_shardings=(ssh, rep, rep), out_shardings=(ssh, rep),
+            )
+            self._insert_paged = jax.jit(
+                write_slot_paged, donate_argnums=(0,),
+                in_shardings=(lsh, rep, rep, rep), out_shardings=lsh,
+            )
+            self._chunk = jax.jit(
+                model.prefill_chunk, donate_argnums=(1,),
+                in_shardings=(psh, lsh) + (rep,) * 4,
+                out_shardings=(rep, lsh),
+            )
+            self._copy = jax.jit(
+                copy_pages, donate_argnums=(0,),
+                in_shardings=(lsh, rep, rep), out_shardings=lsh,
+            )
 
     # ---------------------------------------------------------- telemetry
     def _bump(self, name: str, n: int = 1) -> None:
@@ -608,6 +724,16 @@ class Engine:
             tbl = tbl.copy()
             tbl[self._prefilling, :] = NULL_PAGE
         self.cache["block_table"] = jnp.asarray(tbl)
+        self._canon()
+
+    def _canon(self) -> None:
+        """Re-commit the cache to its canonical shardings after an eager
+        (non-jitted) update — the mesh-pinned jits reject committed args
+        whose placement drifted.  Identity for already-canonical leaves;
+        only admission / release paths ever call it, never the
+        steady-state decode loop."""
+        if self.mesh is not None:
+            self.cache = jax.device_put(self.cache, self._sh_cache)
 
     def _write_slot(self, slot: int, one_cache, pos: int) -> None:
         """Insert a batch-1 prefilled cache into slot `slot` (dense)."""
@@ -624,6 +750,7 @@ class Engine:
             put, self.cache["layers"], one_cache["layers"]
         )
         self.cache["pos"] = self.cache["pos"].at[slot].set(pos)
+        self._canon()
 
     def _write_slot_paged(self, slot: int, one_cache, pos: int,
                           pages: np.ndarray, n_tiles: int) -> None:
@@ -636,6 +763,7 @@ class Engine:
         )
         self._push_table()
         self.cache["pos"] = self.cache["pos"].at[slot].set(pos)
+        self._canon()
 
     # ------------------------------------------------- sampling plumbing
     def _set_slot_params(self, slot: int, req: Request) -> None:
@@ -902,6 +1030,7 @@ class Engine:
         del self._prefill_state[slot]
         self._push_table()
         self.cache["pos"] = self.cache["pos"].at[slot].set(L)
+        self._canon()
         self._emit_first(slot, logits)
 
     def cancel(self, req: Request) -> None:

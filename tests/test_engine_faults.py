@@ -6,7 +6,18 @@ fake clock), preempt-and-requeue token parity (xla and pallas_interpret
 sampler impls), NaN-quarantine isolation, seeded FaultPlan schedules
 across dense/paged/prefix layouts, crash-and-rebuild recovery, deadline
 storms, and the health/watchdog snapshot.
+
+The sharded section at the bottom re-runs the fault lifecycle on (1,8)
+and (2,4) CPU meshes (subprocess: the XLA device-count flag must be set
+before jax initializes) and asserts parity against a single-device
+engine in the same process — faults must degrade identically no matter
+how the cache is sharded.
 """
+import os
+import subprocess
+import sys
+import textwrap
+
 import jax
 import numpy as np
 import pytest
@@ -429,3 +440,176 @@ def test_llm_stream_emits_terminal_chunk_for_rejected_request():
                                      "overloaded"]
     rejected = [c for c in chunks if c.finish_reason == "overloaded"]
     assert all(c.token == -1 for c in rejected)
+
+
+# -------------------------------------------------- faults on the mesh
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def run_py(code: str, devices: int = 8) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = SRC
+    env["JAX_PLATFORMS"] = "cpu"
+    out = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True, env=env,
+        timeout=900,
+    )
+    assert out.returncode == 0, out.stderr[-4000:]
+    return out.stdout
+
+
+# 8 kv heads (not the in-process suite's 2) so the paged pools genuinely
+# shard over every tested model-axis size instead of degrading to
+# replication via sharding.fit_spec.
+_MESH_COMMON = textwrap.dedent("""
+    import jax, numpy as np
+    from repro.core.config import ModelConfig, ParallelConfig
+    from repro.models.model import build_model
+    from repro.obs.trace import TraceRecorder
+    from repro.serving.engine import Engine, Request
+    from repro.serving.faults import FaultPlan
+    from repro.serving.sampling import SamplingParams
+
+    class FakeClock:
+        def __init__(self):
+            self.t = 0.0
+        def __call__(self):
+            return self.t
+        def advance(self, s):
+            self.t += s
+
+    CFG = ModelConfig(name="t", family="dense", num_layers=2, d_model=64,
+                      num_heads=8, num_kv_heads=8, d_ff=128, vocab_size=64,
+                      dtype="float32")
+    PARAMS = build_model(CFG).init(jax.random.PRNGKey(0))
+    MESH = jax.make_mesh(__MESH__, ("data", "model"))
+
+    def model_for(mesh):
+        return build_model(CFG, ParallelConfig(), mesh)
+
+    def prompts_for(n, seed=0, lo=4, hi=10):
+        rng = np.random.default_rng(seed)
+        return [rng.integers(0, 64, size=int(rng.integers(lo, hi + 1)))
+                .astype(np.int32) for _ in range(n)]
+
+    def by_uid(reqs):
+        return sorted(reqs, key=lambda r: r.uid)
+""")
+
+_MESH_LIFECYCLE = _MESH_COMMON + textwrap.dedent("""
+    # --- preempt-resume parity: tight page pool forces an eviction on
+    # the mesh; tokens must match the un-preempted single-device run
+    ps = prompts_for(3, seed=1, lo=5, hi=6)
+
+    def serve(mesh, preempt, num_pages):
+        eng = Engine(model_for(mesh), PARAMS, slots=3, max_len=32,
+                     cache_layout="paged", page_size=8, num_pages=num_pages,
+                     preempt=preempt, prefix_cache=True)
+        reqs = [Request(uid=i, prompt=ps[i], max_new=12,
+                        params=SamplingParams(temperature=0.8, top_k=12,
+                                              seed=40 + i))
+                for i in range(3)]
+        for r in reqs:
+            eng.submit(r)
+        eng.run()
+        return eng, reqs
+
+    _, base = serve(None, False, 0)
+    eng, reqs = serve(MESH, True, 8)
+    assert eng.counters["preempted"] >= 1 and eng.counters["resumed"] >= 1
+    for got, ref in zip(by_uid(reqs), by_uid(base)):
+        assert got.finish_reason == ref.finish_reason
+        assert list(got.output) == list(ref.output), got.uid
+    eng.alloc.check_invariants()
+    print("OK preempt")
+
+    # --- NaN quarantine: logits are computed sharded; the injected NaN
+    # must still quarantine exactly one slot, and the neighbour's tokens
+    # stay bit-identical to the fault-free single-device run
+    qs = prompts_for(2, seed=2)
+
+    def serve_q(mesh, faults):
+        eng = Engine(model_for(mesh), PARAMS, slots=2, max_len=64,
+                     cache_layout="paged", page_size=8, faults=faults)
+        reqs = [Request(uid=i, prompt=qs[i], max_new=8) for i in range(2)]
+        for r in reqs:
+            eng.submit(r)
+        eng.run()
+        return eng, reqs
+
+    _, clean = serve_q(None, None)
+    eng, faulted = serve_q(MESH, FaultPlan(nan={4: (1,)}))
+    victim, survivor = faulted[1], faulted[0]
+    assert victim.finish_reason == "error" and len(victim.output) < 8
+    assert eng.counters["errors"] == 1
+    assert survivor.finish_reason == clean[0].finish_reason
+    assert list(survivor.output) == list(clean[0].output)
+    print("OK quarantine")
+
+    # --- trace byte-parity: the lifecycle JSONL of a seeded chaos run
+    # (fake clock) is byte-identical on and off the mesh
+    ts = prompts_for(4, seed=9)
+
+    def serve_t(mesh):
+        clk, rec = FakeClock(), TraceRecorder()
+        eng = Engine(model_for(mesh), PARAMS, slots=2, max_len=64,
+                     cache_layout="paged", page_size=8, clock=clk, trace=rec,
+                     faults=FaultPlan.seeded(3, horizon=24, slots=2,
+                                             nan_events=1, outages=1,
+                                             max_outage=3))
+        for i, p in enumerate(ts):
+            eng.submit(Request(uid=i, prompt=p, max_new=6))
+        while eng.queue or any(s is not None for s in eng.slot_req):
+            eng.step()
+            clk.advance(0.01)
+        return rec.to_jsonl()
+
+    assert serve_t(MESH) == serve_t(None)
+    print("OK trace")
+""")
+
+
+@pytest.mark.parametrize("mesh_shape", [(1, 8), (2, 4)])
+def test_mesh_fault_lifecycle_parity(mesh_shape):
+    """Preempt-resume parity, NaN-quarantine isolation, and byte-identical
+    lifecycle traces, re-pinned on the mesh."""
+    out = run_py(_MESH_LIFECYCLE.replace("__MESH__", repr(mesh_shape)))
+    assert out.count("OK") == 3, out
+
+
+_MESH_CHAOS = _MESH_COMMON + textwrap.dedent("""
+    for seed in range(5):
+        ps = prompts_for(6, seed=100 + seed)
+
+        def serve(mesh, faults):
+            eng = Engine(model_for(mesh), PARAMS, slots=2, max_len=64,
+                         cache_layout="paged", page_size=8, faults=faults)
+            reqs = [Request(uid=i, prompt=p, max_new=6)
+                    for i, p in enumerate(ps)]
+            for r in reqs:
+                eng.submit(r)
+            eng.run(max_steps=2_000)
+            return eng, reqs
+
+        _, clean = serve(None, None)
+        plan = FaultPlan.seeded(seed, horizon=24, slots=2, nan_events=2,
+                                outages=1, max_outage=4)
+        eng, reqs = serve(MESH, plan)
+        assert all(r.finish_reason for r in reqs), f"seed {seed} did not drain"
+        for got, ref in zip(by_uid(reqs), by_uid(clean)):
+            assert got.finish_reason in ("length", "error")
+            if got.finish_reason == "length":
+                assert list(got.output) == list(ref.output), (seed, got.uid)
+        eng.alloc.check_invariants()
+        assert eng.alloc.free_pages == eng.alloc.num_pages - 1
+        print("OK seed", seed)
+""")
+
+
+@pytest.mark.parametrize("mesh_shape", [(1, 8), (2, 4)])
+def test_mesh_chaos_seeded_drain(mesh_shape):
+    """Five seeded FaultPlan schedules drain on the mesh; survivors stay
+    token-identical to the fault-free single-device run."""
+    out = run_py(_MESH_CHAOS.replace("__MESH__", repr(mesh_shape)))
+    assert out.count("OK seed") == 5, out
