@@ -1,43 +1,199 @@
-"""Paper table 3 analogue: bio data-pipeline throughput (BioNeMo reports
-dataloader scaling as part of the training path)."""
+"""Paper table 3 analogue: bio data-plane throughput (BioNeMo reports
+dataloader scaling and size-aware batching as part of the training path).
+
+Rows (all appended to ``BENCH_train.json`` under the ``data/`` prefix):
+
+  * host-pipeline throughput (cluster-sampled MLM, packed CLM) and
+    memmap random-access latency — the original PR-0 rows
+  * sharded-store random access — the multi-shard store must stay within
+    the same order as the single-file memmap
+  * ``padding_waste`` fixed-batch vs size-aware on the length-skewed
+    synthetic protein corpus; the >=30% relative reduction is ASSERTED,
+    not just reported (the whole point of token-budget batching)
+  * sustained trainer tokens/s with the full data plane enabled
+    (sharded store -> size-aware sampler -> background producer ->
+    Trainer per-shape compile cache)
+  * embedding throughput through the serving engine's ``LLM.embed``
+    batched path
+
+Derived strings use ``tokens_per_s=`` / ``seqs_per_s=`` — deliberately
+NOT the ``tok/s=`` literal ``compare.py --bench-regress`` gates on: these
+are data-plane rows on a noisy CPU container, not the guarded train-step
+throughput trajectory.
+"""
 from __future__ import annotations
 
 import tempfile
 import time
 
+import numpy as np
 
-def run(report):
+
+def _host_pipeline_rows(report, d: str) -> None:
     from repro.data.dataset import build_synthetic_protein_memmap
     from repro.data.pipeline import CLMBatches, MLMBatches
     from repro.data.sampler import ClusterSampler, greedy_length_clusters
 
+    ds, tok = build_synthetic_protein_memmap(f"{d}/p", n=2000)
+    lengths = ds.lengths()
+    sampler = ClusterSampler(greedy_length_clusters(lengths, 64))
+
+    it = iter(MLMBatches(ds, tok, sampler, batch=32, seq_len=256))
+    next(it)
+    t0 = time.perf_counter()
+    n = 20
+    for _ in range(n):
+        next(it)
+    us = (time.perf_counter() - t0) / n * 1e6
+    report("data/mlm_cluster_sampled_batch32x256", us,
+           f"seqs_per_s={32 / (us / 1e6):.0f}")
+
+    it = iter(CLMBatches(ds, batch=32, seq_len=256, eos_id=tok.eos_id))
+    next(it)
+    t0 = time.perf_counter()
+    for _ in range(n):
+        next(it)
+    us = (time.perf_counter() - t0) / n * 1e6
+    report("data/clm_packed_batch32x256", us,
+           f"tokens_per_s={32 * 256 / (us / 1e6):.0f}")
+
+    # random access latency into the memmap store
+    t0 = time.perf_counter()
+    for i in range(0, 2000, 7):
+        _ = ds[i]
+    us = (time.perf_counter() - t0) / (2000 // 7) * 1e6
+    report("data/memmap_random_access", us, "per-sequence")
+
+
+def _sharded_store_row(report, d: str) -> None:
+    from repro.data.dataset import build_synthetic_protein_store
+
+    store, _ = build_synthetic_protein_store(
+        f"{d}/store", n=2000, shard_tokens=1 << 15
+    )
+    t0 = time.perf_counter()
+    for i in range(0, 2000, 7):
+        _ = store[i]
+    us = (time.perf_counter() - t0) / (2000 // 7) * 1e6
+    report("data/sharded_store_random_access", us,
+           f"per-sequence shards={store.num_shards}")
+
+
+def _padding_waste_rows(report, d: str) -> None:
+    """Padded-vs-real token waste, fixed batches vs size-aware batching
+    over the SAME draw stream; asserts the >=30% relative reduction the
+    acceptance criteria demand."""
+    from repro.data.dataset import build_synthetic_protein_memmap
+    from repro.data.sampler import ClusterSampler, greedy_length_clusters
+    from repro.data.size_aware import SizeAwareSampler
+
+    ds, _ = build_synthetic_protein_memmap(f"{d}/pw", n=2000)
+    seq_len, batch = 256, 32
+    budget = batch * seq_len
+    lengths = np.minimum(ds.lengths(), seq_len)
+    n_batches = 50
+
+    def waste(sampled):  # [(lens_in_batch, padded_len)] -> waste fraction
+        padded = sum(len(ls) * L for ls, L in sampled)
+        real = sum(int(ls.sum()) for ls, _ in sampled)
+        return (padded - real) / padded
+
+    base = ClusterSampler(greedy_length_clusters(lengths, 64), seed=0)
+    fixed = waste(
+        [(lengths[base.sample(batch)], seq_len) for _ in range(n_batches)]
+    )
+
+    base = ClusterSampler(greedy_length_clusters(lengths, 64), seed=0)
+    sas = SizeAwareSampler(lengths, budget, base=base)
+    sized = []
+    for _ in range(n_batches):
+        idx, L = sas.sample_batch()
+        sized.append((lengths[idx], L))
+    sa = waste(sized)
+
+    reduction = (fixed - sa) / fixed
+    report("data/padding_waste_fixed_batch32x256", fixed * 1e6,
+           f"waste_frac={fixed:.3f}")
+    report("data/padding_waste_size_aware_8192tok", sa * 1e6,
+           f"waste_frac={sa:.3f} reduction={reduction:.1%}")
+    assert reduction >= 0.30, (
+        f"size-aware batching reduced padding waste only {reduction:.1%} "
+        f"(fixed {fixed:.3f} -> size-aware {sa:.3f}); >=30% required"
+    )
+
+
+def _trainer_row(report, d: str) -> None:
+    """Sustained tokens/s with the full data plane enabled: sharded store
+    -> size-aware sampler -> background producer -> Trainer."""
+    from repro.core.config import ModelConfig, TrainConfig
+    from repro.models.model import build_model
+    from repro.launch.train import make_batches
+    from repro.training.loop import Trainer
+
+    cfg = ModelConfig(
+        name="data-bench", family="dense", num_layers=2, d_model=64,
+        num_heads=4, num_kv_heads=2, d_ff=256, vocab_size=64,
+        dtype="float32", objective="mlm",
+    )
+    tc = TrainConfig(
+        global_batch=8, seq_len=64, total_steps=12, log_every=4,
+        warmup_steps=2, decay_steps=2, learning_rate=1e-3,
+    )
+    batches = make_batches(cfg, tc, f"{d}/tr", sharded=True,
+                           max_tokens=512, producer_depth=2)
+    try:
+        tr = Trainer(build_model(cfg), tc, verbose=False)
+        tr.run(batches)
+    finally:
+        batches.close()
+    last = tr.history[-1]
+    report("data/producer_sharded_train_step", last["step_time"] * 1e6,
+           f"tokens_per_s={last['tokens_per_sec']:.0f} "
+           f"shapes={len(tr._compiled)}")
+
+
+def _embed_row(report) -> None:
+    import jax
+
+    from repro.core.config import ModelConfig
+    from repro.models.model import build_model
+    from repro.serving.api import LLM
+
+    cfg = ModelConfig(
+        name="embed-bench", family="dense", num_layers=2, d_model=64,
+        num_heads=4, num_kv_heads=2, d_ff=256, vocab_size=64,
+        dtype="float32",
+    )
+    model = build_model(cfg)
+    llm = LLM(model, model.init(jax.random.PRNGKey(0)), slots=8,
+              max_len=128)
+    rng = np.random.default_rng(0)
+    prompts = [
+        rng.integers(5, 64, size=int(L)).tolist()
+        for L in rng.integers(16, 120, size=64)
+    ]
+    llm.embed(prompts[:8])  # compile the buckets outside the timing
+    t0 = time.perf_counter()
+    out = llm.embed(prompts)
+    dt = time.perf_counter() - t0
+    toks = sum(len(p) for p in prompts)
+    assert out.shape == (len(prompts), cfg.d_model)
+    report("data/embed_llm_batched_64prompts", dt / len(prompts) * 1e6,
+           f"seqs_per_s={len(prompts) / dt:.0f} "
+           f"tokens_per_s={toks / dt:.0f}")
+
+
+def run(report):
     with tempfile.TemporaryDirectory() as d:
-        ds, tok = build_synthetic_protein_memmap(f"{d}/p", n=2000)
-        lengths = [len(ds[i]) for i in range(len(ds))]
-        sampler = ClusterSampler(greedy_length_clusters(lengths, 64))
+        _host_pipeline_rows(report, d)
+        _sharded_store_row(report, d)
+        _padding_waste_rows(report, d)
+        _trainer_row(report, d)
+    _embed_row(report)
 
-        it = iter(MLMBatches(ds, tok, sampler, batch=32, seq_len=256))
-        next(it)
-        t0 = time.perf_counter()
-        n = 20
-        for _ in range(n):
-            next(it)
-        us = (time.perf_counter() - t0) / n * 1e6
-        report("data/mlm_cluster_sampled_batch32x256", us,
-               f"seqs_per_s={32 / (us / 1e6):.0f}")
 
-        it = iter(CLMBatches(ds, batch=32, seq_len=256))
-        next(it)
-        t0 = time.perf_counter()
-        for _ in range(n):
-            next(it)
-        us = (time.perf_counter() - t0) / n * 1e6
-        report("data/clm_packed_batch32x256", us,
-               f"tokens_per_s={32 * 256 / (us / 1e6):.0f}")
-
-        # random access latency into the memmap store
-        t0 = time.perf_counter()
-        for i in range(0, 2000, 7):
-            _ = ds[i]
-        us = (time.perf_counter() - t0) / (2000 // 7) * 1e6
-        report("data/memmap_random_access", us, "per-sequence")
+if __name__ == "__main__":
+    rows = []
+    print("name,us_per_call,derived")
+    run(lambda n, us, d="": (rows.append(n), print(f"{n},{us:.1f},{d}")))
+    assert rows

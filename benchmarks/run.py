@@ -42,7 +42,9 @@ _REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 # ``serving/...``.
 _TRAJECTORIES = {
     "BENCH_serving.json": lambda name: name.startswith("serving/"),
-    "BENCH_train.json": lambda name: name.startswith("train_step"),
+    "BENCH_train.json": lambda name: (
+        name.startswith("train_step") or name.startswith("data/")
+    ),
 }
 
 

@@ -1,16 +1,18 @@
 """Geneformer-style single-cell embedding example: rank-value encode
 synthetic expression profiles, train the reduced Geneformer recipe briefly,
-extract cell embeddings, and check that they cluster by cell "type".
+extract cell embeddings THROUGH THE SERVING ENGINE (``LLM.embed`` — the
+same batched, length-bucketed, telemetry-instrumented path production
+inference uses), and check that they cluster by cell "type".
 
     PYTHONPATH=src python examples/embed_cells.py
 """
 import numpy as np
-import jax
-import jax.numpy as jnp
 
 from repro.configs import get_smoke_config
 from repro.core.config import TrainConfig
 from repro.models.model import build_model
+from repro.obs.metrics import MetricsRegistry
+from repro.serving.api import LLM
 from repro.training.loop import run_training
 
 
@@ -56,11 +58,14 @@ def main() -> None:
                      log_every=20)
     state, hist = run_training(model, tc, batches())
 
-    # embed all cells: mean-pooled hidden states
-    embed = jax.jit(lambda p, t: model._backbone(
-        p, model._decoder_input(p, {"tokens": t}, "train")[0], mode="train"
-    )[0].mean(axis=1))
-    embs = np.asarray(embed(state.params, jnp.asarray(tokens)))
+    # embed all cells through the serving engine: batched dispatch,
+    # masked mean-pooling on device, one bulk transfer of (n, d) vectors
+    reg = MetricsRegistry()
+    llm = LLM(model, state.params, slots=32, max_len=S, metrics=reg)
+    embs = llm.embed([t.tolist() for t in tokens])
+    c = llm.engine.counters
+    print(f"embedded {embs.shape[0]} cells -> d={embs.shape[1]} "
+          f"(engine: {c['submitted']} submitted, {c['completed']} completed)")
 
     # silhouette-ish check: same-type distance < cross-type distance
     same, cross = [], []

@@ -38,6 +38,11 @@ class MemmapTokenDataset:
         a, b = int(self.offsets[i]), int(self.offsets[i + 1])
         return np.asarray(self.tokens[a:b])
 
+    def lengths(self) -> np.ndarray:
+        """Per-sequence token counts from the index alone — no token
+        bytes touched (size-aware batching wants all lengths up front)."""
+        return np.diff(self.offsets).astype(np.int64)
+
     @classmethod
     def write(cls, prefix: str, sequences: Sequence[np.ndarray]) -> "MemmapTokenDataset":
         os.makedirs(os.path.dirname(prefix) or ".", exist_ok=True)
@@ -87,3 +92,16 @@ def build_synthetic_protein_memmap(
     seqs = synthetic_protein_sequences(n, seed=seed)
     enc = [np.asarray(tok.encode(s), np.int32) for s in seqs]
     return MemmapTokenDataset.write(prefix, enc), tok
+
+
+def build_synthetic_protein_store(
+    root: str, n: int = 2000, seed: int = 0, shard_tokens: int = 1 << 16
+):
+    """Sharded-store twin of :func:`build_synthetic_protein_memmap` —
+    identical sequences for a given (n, seed), stored across shards."""
+    from repro.data.store import ShardedTokenStore
+
+    tok = ProteinTokenizer()
+    seqs = synthetic_protein_sequences(n, seed=seed)
+    enc = [np.asarray(tok.encode(s), np.int32) for s in seqs]
+    return ShardedTokenStore.write(root, enc, shard_tokens=shard_tokens), tok

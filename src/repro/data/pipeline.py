@@ -44,7 +44,14 @@ def mlm_corrupt(
 
 
 class MLMBatches:
-    """ESM-2-style stream: cluster-sample -> pad -> corrupt."""
+    """ESM-2-style stream: cluster-sample -> pad -> corrupt.
+
+    ``sampler`` may be a plain index sampler (``ClusterSampler`` — fixed
+    ``(batch, seq_len)`` shapes) or a batch sampler exposing
+    ``sample_batch() -> (indices, padded_len)`` (``SizeAwareSampler`` —
+    variable rows, bucketed lengths, token budget respected).  Duck-typed
+    on ``sample_batch`` so the two compose without a flag.
+    """
 
     def __init__(
         self,
@@ -74,53 +81,104 @@ class MLMBatches:
         if self.sampler is not None and "sampler" in st:
             self.sampler.load_state_dict(st["sampler"])
 
+    def _pad(self, idx: np.ndarray, L: int) -> np.ndarray:
+        # host hot path: one concatenate + one masked scatter instead of
+        # a per-row Python assignment loop
+        seqs = [self.ds[int(i)][:L] for i in idx]
+        lens = np.fromiter((len(s) for s in seqs), np.int64, count=len(seqs))
+        toks = np.zeros((len(seqs), L), np.int32)
+        toks[np.arange(L)[None, :] < lens[:, None]] = np.concatenate(seqs)
+        return toks
+
     def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
+        if self.sampler is not None and hasattr(self.sampler, "sample_batch"):
+            # bucketed path: the sampler owns batch size AND padded length
+            while True:
+                idx, L = self.sampler.sample_batch()
+                toks = self._pad(idx, min(int(L), self.seq_len))
+                yield mlm_corrupt(toks, self.tok, self.rng, self.mask_prob)
         L = self.seq_len
         while True:
             if self.sampler is not None:
                 idx = self.sampler.sample(self.batch)
             else:
                 idx = self.rng.integers(0, len(self.ds), size=self.batch)
-            # host hot path: one concatenate + one masked scatter instead of
-            # a per-row Python assignment loop
-            seqs = [self.ds[int(i)][:L] for i in idx]
-            lens = np.fromiter((len(s) for s in seqs), np.int64, count=len(seqs))
-            toks = np.zeros((self.batch, L), np.int32)
-            toks[np.arange(L)[None, :] < lens[:, None]] = np.concatenate(seqs)
-            yield mlm_corrupt(toks, self.tok, self.rng, self.mask_prob)
+            yield mlm_corrupt(self._pad(idx, L), self.tok, self.rng,
+                              self.mask_prob)
 
 
 class CLMBatches:
-    """Packed causal-LM stream (documents concatenated to fixed windows)."""
+    """Packed causal-LM stream (documents concatenated to fixed windows).
+
+    ``eos_id`` (when set) is inserted between packed documents so the
+    causal model sees an explicit document boundary instead of silently
+    attending across unrelated sequences.  ``sampler`` (duck-typed on
+    ``sample_batch``, e.g. ``SizeAwareSampler``) switches to a bucketed
+    per-document mode: variable-row batches padded to the bucket length,
+    with a ``loss_mask`` zeroing the padding.
+    """
 
     def __init__(
-        self, ds: MemmapTokenDataset, batch: int, seq_len: int, seed: int = 0
+        self, ds: MemmapTokenDataset, batch: int, seq_len: int, seed: int = 0,
+        eos_id: Optional[int] = None, sampler=None,
     ):
         self.ds, self.batch, self.seq_len = ds, batch, seq_len
+        self.eos_id = eos_id
+        self.sampler = sampler
         self.rng = np.random.default_rng(seed)
         self._buf = np.empty((0,), np.int32)
 
     def state_dict(self) -> Dict:
         """Resumable cursor: Generator state + the packing carry buffer."""
-        return {
+        st: Dict = {
             "rng": self.rng.bit_generator.state,
             "buf": np.asarray(self._buf, np.int32).tolist(),
         }
+        if self.sampler is not None:
+            st["sampler"] = self.sampler.state_dict()
+        return st
 
     def load_state_dict(self, st: Dict) -> None:
         self.rng.bit_generator.state = st["rng"]
         self._buf = np.asarray(st["buf"], np.int32)
+        if self.sampler is not None and "sampler" in st:
+            self.sampler.load_state_dict(st["sampler"])
 
     def _fill(self, need: int):
+        # the RNG stream is untouched by the separator, so cursors taken
+        # with and without eos_id replay identically-ordered documents
         chunks = [self._buf]
         have = len(self._buf)
+        sep = (
+            None if self.eos_id is None
+            else np.asarray([self.eos_id], np.int32)
+        )
         while have < need:
             s = self.ds[int(self.rng.integers(len(self.ds)))]
             chunks.append(s)
             have += len(s)
+            if sep is not None:
+                chunks.append(sep)
+                have += 1
         self._buf = np.concatenate(chunks)
 
     def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
+        if self.sampler is not None and hasattr(self.sampler, "sample_batch"):
+            # bucketed per-document mode: no packing, loss on real tokens
+            while True:
+                idx, L = self.sampler.sample_batch()
+                L = min(int(L), self.seq_len)
+                seqs = [self.ds[int(i)][:L] for i in idx]
+                lens = np.fromiter(
+                    (len(s) for s in seqs), np.int64, count=len(seqs)
+                )
+                real = np.arange(L)[None, :] < lens[:, None]
+                toks = np.zeros((len(seqs), L), np.int32)
+                toks[real] = np.concatenate(seqs)
+                yield {
+                    "tokens": toks,
+                    "loss_mask": real.astype(np.float32),
+                }
         need = self.batch * self.seq_len
         while True:
             self._fill(need)

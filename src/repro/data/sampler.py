@@ -19,6 +19,11 @@ class ClusterSampler:
         self.members = [np.asarray(m, np.int64) for m in cluster_members]
         assert all(len(m) > 0 for m in self.members), "empty cluster"
         self.rng = np.random.default_rng(seed)
+        # flat member table for vectorized sampling: cluster c occupies
+        # _flat[_off[c] : _off[c] + _sizes[c]]
+        self._sizes = np.asarray([len(m) for m in self.members], np.int64)
+        self._off = np.concatenate([[0], np.cumsum(self._sizes[:-1])])
+        self._flat = np.concatenate(self.members)
 
     def state_dict(self) -> Dict:
         """Resumable cursor (JSON-serializable Generator state)."""
@@ -29,10 +34,11 @@ class ClusterSampler:
 
     def sample(self, n: int) -> np.ndarray:
         cl = self.rng.integers(0, len(self.members), size=n)
-        return np.array(
-            [self.members[c][self.rng.integers(len(self.members[c]))] for c in cl],
-            np.int64,
-        )
+        # broadcast high array consumes the Generator's bit stream
+        # identically to the former per-item scalar calls, so draws are
+        # preserved for any fixed seed (regression-tested)
+        k = self.rng.integers(0, self._sizes[cl])
+        return self._flat[self._off[cl] + k]
 
     def __iter__(self) -> Iterator[int]:
         while True:

@@ -29,9 +29,15 @@ import numpy as np
 from repro.checkpoint import ckpt
 from repro.configs import get_config, get_smoke_config
 from repro.core.config import ParallelConfig, TrainConfig
-from repro.data.dataset import MemmapTokenDataset, build_synthetic_protein_memmap
+from repro.data.dataset import (
+    MemmapTokenDataset,
+    build_synthetic_protein_memmap,
+    build_synthetic_protein_store,
+)
 from repro.data.pipeline import CLMBatches, MLMBatches
+from repro.data.producer import BackgroundProducer
 from repro.data.sampler import ClusterSampler, greedy_length_clusters
+from repro.data.size_aware import SizeAwareSampler
 from repro.models.model import build_model
 from repro.training.loop import Trainer
 
@@ -56,18 +62,54 @@ class Seq2SeqBatches:
             yield b
 
 
-def make_batches(cfg, tc: TrainConfig, data_dir: str, seed: int = 0):
+def make_batches(cfg, tc: TrainConfig, data_dir: str, seed: int = 0, *,
+                 sharded: bool = False, max_tokens: int = 0,
+                 producer_depth: int = 0, round_to: int = 1):
     """Returns the pipeline OBJECT (not an iterator) so the Trainer can
-    checkpoint/restore its cursor (``state_dict``/``load_state_dict``)."""
-    ds, tok = build_synthetic_protein_memmap(f"{data_dir}/protein", n=2000, seed=seed)
+    checkpoint/restore its cursor (``state_dict``/``load_state_dict``).
+
+    ``sharded`` feeds from the multi-shard memmap store instead of the
+    single-file dataset; ``max_tokens`` > 0 switches to size-aware
+    (token-budget) batching with per-bucket shapes, ``round_to`` keeping
+    every batch's row count divisible by the mesh's data axis;
+    ``producer_depth`` > 0 wraps the pipeline in a background producer.
+    """
+    if sharded:
+        ds, tok = build_synthetic_protein_store(
+            f"{data_dir}/protein_store", n=2000, seed=seed
+        )
+    else:
+        ds, tok = build_synthetic_protein_memmap(
+            f"{data_dir}/protein", n=2000, seed=seed
+        )
+    lengths = ds.lengths()
+    base = ClusterSampler(greedy_length_clusters(lengths, 64), seed=seed)
     if cfg.objective == "mlm":
-        lengths = [len(ds[i]) for i in range(len(ds))]
-        sampler = ClusterSampler(greedy_length_clusters(lengths, 64), seed=seed)
-        return MLMBatches(ds, tok, sampler, tc.global_batch, tc.seq_len,
+        if max_tokens:
+            sampler = SizeAwareSampler(
+                np.minimum(lengths, tc.seq_len), max_tokens,
+                base=base, round_to=round_to,
+            )
+        else:
+            sampler = base
+        pipe = MLMBatches(ds, tok, sampler, tc.global_batch, tc.seq_len,
                           cfg.mlm_mask_prob, seed)
-    if cfg.is_encoder_decoder:
-        return Seq2SeqBatches(CLMBatches(ds, tc.global_batch, tc.seq_len, seed))
-    return CLMBatches(ds, tc.global_batch, tc.seq_len, seed)
+    elif cfg.is_encoder_decoder:
+        pipe = Seq2SeqBatches(
+            CLMBatches(ds, tc.global_batch, tc.seq_len, seed,
+                       eos_id=tok.eos_id)
+        )
+    else:
+        sampler = (
+            SizeAwareSampler(np.minimum(lengths, tc.seq_len), max_tokens,
+                             base=base, round_to=round_to)
+            if max_tokens else None
+        )
+        pipe = CLMBatches(ds, tc.global_batch, tc.seq_len, seed,
+                          eos_id=tok.eos_id, sampler=sampler)
+    if producer_depth:
+        pipe = BackgroundProducer(pipe, depth=producer_depth)
+    return pipe
 
 
 def build_mesh(spec: str):
@@ -97,6 +139,18 @@ def main() -> None:
                    help="auto | none | DxM, e.g. 4x2 = (data=4, model=2)")
     p.add_argument("--smoke", action="store_true", help="reduced config")
     p.add_argument("--data-dir", default="/tmp/repro_data")
+    p.add_argument("--sharded-data", action="store_true",
+                   help="feed from the multi-shard memmap store "
+                        "(repro.data.store) instead of the single-file "
+                        "dataset")
+    p.add_argument("--max-tokens-per-batch", type=int, default=0,
+                   help="enable size-aware (token-budget) batching: "
+                        "variable-row batches padded per length bucket, "
+                        "every batch under this many padded tokens "
+                        "(0 = fixed --batch x --seq shapes)")
+    p.add_argument("--producer", type=int, default=0,
+                   help="background-producer prefetch depth (0 = build "
+                        "batches inline on the consumer thread)")
     p.add_argument("--ckpt-dir", default="")
     p.add_argument("--ckpt-every", type=int, default=0,
                    help="checkpoint period in steps (0 = final-only when "
@@ -131,7 +185,17 @@ def main() -> None:
         f"arch={cfg.name} params(analytic)={cfg.param_count():,} "
         f"mesh={dict(zip(mesh.axis_names, mesh.devices.shape)) if mesh else None}"
     )
-    batches = make_batches(cfg, tc, a.data_dir)
+    # size-aware batches must keep rows divisible by the data axis so
+    # sharded placement never sees a ragged leading dim
+    data_axis = (
+        dict(zip(mesh.axis_names, mesh.devices.shape)).get("data", 1)
+        if mesh is not None else 1
+    )
+    batches = make_batches(
+        cfg, tc, a.data_dir,
+        sharded=a.sharded_data, max_tokens=a.max_tokens_per_batch,
+        producer_depth=a.producer, round_to=data_axis,
+    )
     resume = a.resume
     if resume == "auto":
         resume = ckpt.latest_step(a.ckpt_dir) or ""
@@ -154,8 +218,12 @@ def main() -> None:
         hooks.append(_dump)
     trainer = Trainer(model, tc, hooks=hooks, metrics=reg,
                       profile=bool(a.profile))
-    with trace_ctx(a.profile):
-        state, history = trainer.run(batches, resume_from=resume or None)
+    try:
+        with trace_ctx(a.profile):
+            state, history = trainer.run(batches, resume_from=resume or None)
+    finally:
+        if hasattr(batches, "close"):
+            batches.close()
     if a.profile and trainer.step_timer is not None:
         print("step timer:")
         for line in trainer.step_timer.report().splitlines():

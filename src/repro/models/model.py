@@ -219,6 +219,28 @@ class Model:
         cache = {"layers": caches, "pos": pos}
         return lg, cache
 
+    def embed_pool(self, params, batch, lengths: jax.Array) -> jax.Array:
+        """Masked mean-pooled sequence embeddings: (B, S) tokens +
+        (B,) valid lengths -> (B, d_model) float32.
+
+        Runs the full-sequence forward in ``mode="train"`` — no decode
+        cache is built (embedding extraction never decodes), and for
+        bidirectional (MLM) models the pad tokens are visible to
+        attention exactly as they are during training, so pooled vectors
+        match what the model was optimized to produce.  Only positions
+        ``< lengths[b]`` enter the mean.
+        """
+        x, _ = self._decoder_input(params, batch, "train")
+        x, _, _ = self._backbone(params, x, mode="train")
+        S = x.shape[1]
+        mask = (
+            jnp.arange(S, dtype=jnp.int32)[None, :]
+            < jnp.asarray(lengths, jnp.int32)[:, None]
+        )
+        x = x.astype(jnp.float32) * mask[..., None]
+        denom = jnp.maximum(mask.sum(axis=1), 1).astype(jnp.float32)
+        return x.sum(axis=1) / denom[:, None]
+
     def prefill_chunk(self, params, layers, tokens: jax.Array,
                       block_row: jax.Array, start, n_valid):
         """One bounded chunk of an incremental prefill over the paged

@@ -208,6 +208,15 @@ class LLM:
             ))
         return outs
 
+    def embed(self, prompts) -> np.ndarray:
+        """Batched embedding extraction through the engine: token prompts
+        -> ``(n, d_model)`` float32 masked-mean-pooled vectors, in input
+        order.  Prompts dispatch in length-bucketed device batches and
+        the result comes back in one bulk transfer; lifecycle counters
+        and trace events flow through the engine's telemetry like any
+        generate call.  See ``Engine.embed``."""
+        return self.engine.embed(prompts)
+
     def stream(self, prompts, params: ParamsArg = None,
                max_steps: int = 100_000) -> Iterator[StreamChunk]:
         """Yield tokens as the engine decodes them, interleaved across

@@ -569,6 +569,7 @@ class Engine:
             )
             self._chunk = jax.jit(model.prefill_chunk, donate_argnums=(1,))
             self._copy = jax.jit(copy_pages, donate_argnums=(0,))
+            self._embed_fn = jax.jit(model.embed_pool)
         else:
             # mesh-aware jits: every dispatch pins its in/out shardings to
             # the canonical placement (params per param_specs, cache per
@@ -615,6 +616,12 @@ class Engine:
             self._copy = jax.jit(
                 copy_pages, donate_argnums=(0,),
                 in_shardings=(lsh, rep, rep), out_shardings=lsh,
+            )
+            # embedding extraction: batch replicated in (it is O(B·S)
+            # small), params per param_specs, pooled (B, d) out replicated
+            self._embed_fn = jax.jit(
+                model.embed_pool,
+                in_shardings=(psh, rep, rep), out_shardings=rep,
             )
 
     # ---------------------------------------------------------- telemetry
@@ -699,6 +706,78 @@ class Engine:
                    prompt_tokens=len(req.prompt), max_new=req.max_new)
         self._emit("queued", req, ts=req.t_submit,
                    queue_depth=len(self.queue))
+
+    # ---------------------------------------------------------- embedding
+    def embed(self, prompts: List[List[int]]) -> np.ndarray:
+        """Batched embedding extraction: token prompts -> (n, d_model)
+        float32 masked-mean-pooled vectors, in input order.
+
+        Prompts group by power-of-2 length bucket and dispatch in rows of
+        up to ``slots`` per jitted call — at most O(log max_len) compiled
+        shapes, reused across calls.  Every dispatch stays on device; the
+        (n, d) result comes back in ONE bulk ``device_get`` at the end.
+        Pooling is right-pad safe for every stack this engine serves
+        (causal attention/SSM never let pads reach valid rows;
+        bidirectional models see pads exactly as during training), so no
+        paddable gate applies.  Lifecycle counters/trace use the standard
+        vocabulary: each prompt counts submitted+completed, each dispatch
+        emits a ``prefill`` event and the call one ``finish``.
+        """
+        cfg = self.model.cfg
+        if cfg.is_encoder_decoder or self.n_front:
+            raise ValueError(
+                "embed() supports decoder-only text stacks — encoder-"
+                "decoder and vision-frontend models have no single "
+                "token-aligned hidden sequence to pool"
+            )
+        prompts = [np.asarray(p, np.int32) for p in prompts]
+        n = len(prompts)
+        if n == 0:
+            return np.zeros((0, cfg.d_model), np.float32)
+        for i, p in enumerate(prompts):
+            if p.ndim != 1 or len(p) == 0:
+                raise ValueError(f"prompt {i}: empty or non-1-D")
+            if len(p) > self.max_len:
+                raise ValueError(
+                    f"prompt {i}: {len(p)} tokens overflows max_len "
+                    f"{self.max_len}"
+                )
+        self._bump("submitted", n)
+        groups: Dict[int, List[int]] = {}
+        for i, p in enumerate(prompts):
+            b = 8
+            while b < len(p):
+                b *= 2
+            groups.setdefault(max(len(p), min(b, self.max_len)), []).append(i)
+        parts = []      # (input positions, device (rows, d) slice)
+        t0 = self._clock()
+        for L in sorted(groups):
+            idxs = groups[L]
+            for s in range(0, len(idxs), self.B):
+                chunk = idxs[s : s + self.B]
+                # pad the row dimension to the full slot count so each
+                # bucket compiles exactly one (B, L) shape
+                toks = np.zeros((self.B, L), np.int32)
+                lens = np.zeros((self.B,), np.int32)
+                for r, gi in enumerate(chunk):
+                    toks[r, : len(prompts[gi])] = prompts[gi]
+                    lens[r] = len(prompts[gi])
+                self._emit("prefill", None, embed=True, bucket=L,
+                           rows=len(chunk))
+                emb = self._embed_fn(
+                    self.params,
+                    {"tokens": jnp.asarray(toks)},
+                    jnp.asarray(lens),
+                )
+                parts.append((chunk, emb[: len(chunk)]))
+        host = jax.device_get([e for _, e in parts])  # ONE bulk transfer
+        out = np.zeros((n, host[0].shape[-1]), np.float32)
+        for (chunk, _), h in zip(parts, host):
+            out[np.asarray(chunk, np.int64)] = h
+        self._bump("completed", n)
+        self._emit("finish", None, embed=True, embedded=n,
+                   wall=self._clock() - t0)
+        return out
 
     def _bucket(self, n: int) -> int:
         """Pad a prompt/chunk length to a power-of-2 bucket (min 8, capped

@@ -140,7 +140,10 @@ class Trainer:
         ) or None
         self.prefetch = max(int(prefetch), 1)
         self._jit_step = TS.make_sharded_train_step(model, tc)
-        self._compiled = None
+        # per-shape compile cache: size-aware batching yields a bounded
+        # set of (rows, len) shapes (one per length bucket); each shape
+        # AOT-compiles once and is reused, never recompiled per step
+        self._compiled: Dict[Any, Dict[str, Any]] = {}
         self.hlo_cost: Optional[Dict[str, Any]] = None  # per-device, one step
         self._model_flops = 0.0                         # global, one step
         self.state: Optional[TrainState] = None
@@ -226,44 +229,66 @@ class Trainer:
         self._t0 = self._t_log = time.perf_counter()
         return self
 
-    def _build_compiled(self, batch) -> None:
-        """AOT-compile the sharded step once (avoids the double compile of
-        lower-after-first-call) and extract the HLO roofline terms the
-        tokens/s / MFU report uses."""
+    @staticmethod
+    def _batch_sig(batch) -> Any:
+        """Hashable shape signature of a device batch — the compile-cache
+        key.  Bucketed pipelines emit a bounded set of these."""
+        if not isinstance(batch, dict):
+            return None
+        return tuple(
+            sorted(
+                (k, tuple(v.shape), str(v.dtype)) for k, v in batch.items()
+            )
+        )
+
+    def _build_compiled(self, batch, sig) -> Dict[str, Any]:
+        """AOT-compile the sharded step for this batch shape (avoids the
+        double compile of lower-after-first-call) and extract the HLO
+        roofline terms the tokens/s / MFU report uses."""
+        entry: Dict[str, Any] = {"fn": self._jit_step, "hlo": None,
+                                 "flops": 0.0}
         try:
             compiled = self._jit_step.lower(self.state, batch).compile()
             try:
                 from repro.launch.hlo_cost import analyze
 
-                self.hlo_cost = analyze(compiled.as_text())
+                entry["hlo"] = analyze(compiled.as_text())
             except Exception:  # noqa: BLE001 — reporting only
-                self.hlo_cost = None
-            self._compiled = compiled
+                pass
+            entry["fn"] = compiled
         except Exception:  # noqa: BLE001 — fall back to on-dispatch compile
-            self._compiled = self._jit_step
+            pass
         tok = batch.get("tokens") if isinstance(batch, dict) else None
         if tok is not None and getattr(tok, "ndim", 0) >= 2:
             # model-FLOPs convention: 6 · active params · processed tokens
-            self._model_flops = (
+            entry["flops"] = (
                 6.0
                 * self.model.cfg.active_param_count()
                 * tok.shape[0]
                 * tok.shape[1]
             )
+        self._compiled[sig] = entry
+        return entry
 
     # ------------------------------------------------------------ stepping
     def step(self) -> int:
         """One optimizer step: pull a prefetched device batch, run the
         sharded step, stash device metrics; log/checkpoint on schedule."""
         batch = next(self._it)
-        if self._compiled is None:
-            self._build_compiled(batch)
+        sig = self._batch_sig(batch)
+        entry = self._compiled.get(sig)
+        if entry is None:
+            entry = self._build_compiled(batch, sig)
+        # MFU/roofline terms follow the shape actually stepped
+        self._model_flops = entry["flops"]
+        self.hlo_cost = entry["hlo"]
+        fn = entry["fn"]
         if self.step_timer is not None:
             with self.step_timer.span("train_step"), \
                     annotate("train/step", enabled=True):
-                self.state, metrics = self._compiled(self.state, batch)
+                self.state, metrics = fn(self.state, batch)
         else:
-            self.state, metrics = self._compiled(self.state, batch)
+            self.state, metrics = fn(self.state, batch)
         s = self.step_idx
         self.step_idx = s + 1
         self._pending.append(metrics)

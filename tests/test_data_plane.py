@@ -1,0 +1,602 @@
+"""Data-plane subsystem: sharded memmap store, token-budget batching,
+background producer — and the full-stack bit-exact resume contract
+(sharded store + size-aware sampler + producer through the Trainer).
+"""
+import os
+
+import numpy as np
+import pytest
+
+from repro.data.dataset import (
+    build_synthetic_protein_memmap,
+    build_synthetic_protein_store,
+)
+from repro.data.pipeline import CLMBatches, MLMBatches
+from repro.data.producer import BackgroundProducer
+from repro.data.sampler import ClusterSampler, greedy_length_clusters
+from repro.data.size_aware import SizeAwareSampler, length_buckets
+from repro.data.store import (
+    MANIFEST,
+    ShardedStoreWriter,
+    ShardedTokenStore,
+)
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAS_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - CI installs hypothesis
+    HAS_HYPOTHESIS = False
+
+
+def _corpus(tmp_path, n=300, seed=1, shard_tokens=4096):
+    return build_synthetic_protein_store(
+        str(tmp_path / "store"), n=n, seed=seed, shard_tokens=shard_tokens
+    )
+
+
+# --------------------------------------------------------------------- #
+# sharded store
+# --------------------------------------------------------------------- #
+def test_store_roundtrip_matches_single_file(tmp_path):
+    store, _ = _corpus(tmp_path)
+    mm, _ = build_synthetic_protein_memmap(
+        str(tmp_path / "mm" / "p"), n=300, seed=1
+    )
+    assert store.num_shards > 1  # the threshold actually sharded
+    assert len(store) == len(mm)
+    for i in (0, 1, 149, 298, 299):
+        assert np.array_equal(store[i], mm[i])
+    assert np.array_equal(store.lengths(), mm.lengths())
+    assert store.total_tokens == int(mm.lengths().sum())
+
+
+def test_store_locate_and_bounds(tmp_path):
+    store, _ = _corpus(tmp_path)
+    # every global index maps back through (shard, local) consistently
+    for i in range(0, len(store), 13):
+        k, j = store.locate(i)
+        assert int(store.cum_seqs[k]) + j == i
+        assert 0 <= j < store.shards[k]["sequences"]
+    with pytest.raises(IndexError):
+        store.locate(len(store))
+    with pytest.raises(IndexError):
+        store.locate(-1)
+
+
+def test_store_manifest_committed_last(tmp_path):
+    """A writer that never finalizes leaves shard files but NO manifest —
+    the store is invisible, not truncated (atomic-commit discipline)."""
+    root = str(tmp_path / "crash")
+    w = ShardedStoreWriter(root, shard_tokens=64)
+    for _ in range(20):
+        w.add(np.arange(10, dtype=np.int32))
+    # crash before finalize: shards staged, manifest absent
+    assert any(f.endswith(".bin") for f in os.listdir(root))
+    assert MANIFEST not in os.listdir(root)
+    with pytest.raises(FileNotFoundError):
+        ShardedTokenStore(root)
+    w.finalize()
+    assert len(ShardedTokenStore(root)) == 20
+
+
+def test_store_writer_validation(tmp_path):
+    w = ShardedStoreWriter(str(tmp_path / "v"))
+    with pytest.raises(ValueError):
+        w.add(np.empty((0,), np.int32))
+    with pytest.raises(ValueError):
+        w.finalize()  # empty store
+    w2 = ShardedStoreWriter(str(tmp_path / "v2"))
+    w2.add([1, 2, 3])
+    w2.finalize()
+    with pytest.raises(RuntimeError):
+        w2.finalize()
+
+
+def test_store_version_rejected(tmp_path):
+    store, _ = _corpus(tmp_path)
+    import json
+
+    path = os.path.join(store.root, MANIFEST)
+    with open(path) as f:
+        m = json.load(f)
+    m["version"] = 99
+    with open(path, "w") as f:
+        json.dump(m, f)
+    with pytest.raises(ValueError, match="version"):
+        ShardedTokenStore(store.root)
+
+
+def test_worker_shards_disjoint_and_complete(tmp_path):
+    store, _ = _corpus(tmp_path)
+    W = 3
+    assigned = [store.shard_assignment(w, W) for w in range(W)]
+    flat = sorted(s for a in assigned for s in a)
+    assert flat == list(range(store.num_shards))  # disjoint + complete
+    seen = []
+    for w in range(W):
+        seen += [s.tobytes() for s in store.reader(worker=w, num_workers=W)]
+    assert len(seen) == len(store)
+    assert sorted(seen) == sorted(store[i].tobytes() for i in range(len(store)))
+    with pytest.raises(ValueError):
+        store.shard_assignment(3, 3)
+
+
+def test_reader_resume_bit_exact(tmp_path):
+    store, _ = _corpus(tmp_path)
+    r = store.reader(worker=1, num_workers=2)
+    consumed = [next(r) for _ in range(25)]
+    cur = r.state_dict()
+    rest = [s.tobytes() for s in r]
+
+    r2 = store.reader(worker=1, num_workers=2)
+    r2.load_state_dict(cur)
+    rest2 = [s.tobytes() for s in r2]
+    assert rest == rest2
+    assert len(consumed) + len(rest) == len(store.reader(worker=1, num_workers=2))
+
+
+# --------------------------------------------------------------------- #
+# size-aware (token-budget) batching
+# --------------------------------------------------------------------- #
+def _check_budget(sas, lengths, budget, round_to=1, n=40):
+    for _ in range(n):
+        idx, L = sas.sample_batch()
+        assert len(idx) * L <= budget, (len(idx), L)
+        assert (lengths[idx] <= L).all()
+        assert len(idx) % round_to == 0
+        assert len(idx) >= 1
+
+
+def test_size_aware_budget_and_round_to(tmp_path):
+    store, _ = _corpus(tmp_path)
+    lengths = store.lengths()
+    for round_to in (1, 2, 4):
+        sas = SizeAwareSampler(lengths, 2048, seed=0, round_to=round_to)
+        _check_budget(sas, lengths, 2048, round_to)
+
+
+def test_size_aware_composes_with_cluster_sampler(tmp_path):
+    store, _ = _corpus(tmp_path)
+    lengths = store.lengths()
+    base = ClusterSampler(greedy_length_clusters(lengths, 8), seed=3)
+    sas = SizeAwareSampler(lengths, 2048, base=base, seed=0)
+    _check_budget(sas, lengths, 2048)
+
+
+def test_size_aware_rejects_impossible_budget():
+    with pytest.raises(ValueError, match="cannot fit"):
+        SizeAwareSampler([10, 200], 100, round_to=1)
+    with pytest.raises(ValueError, match="exceeds the top bucket"):
+        SizeAwareSampler([10, 300], 4096, boundaries=[64, 128])
+
+
+def test_length_buckets_geometric():
+    b = length_buckets(200, min_len=16, growth=1.3)
+    assert b[0] == 16 and b[-1] == 200
+    assert (np.diff(b) > 0).all()
+    # waste inside a bucket is bounded by the growth factor (+1 for the
+    # integer ceil in each boundary)
+    assert (b[1:] <= np.ceil(b[:-1] * 1.3)).all()
+
+
+def test_size_aware_padding_waste_below_bound(tmp_path):
+    """Mean padded-token waste of emitted batches stays under the
+    geometric-bucket bound (1 - 1/growth plus slack), far below the
+    ~50% of fixed-shape padding on this corpus."""
+    store, _ = _corpus(tmp_path, n=500)
+    lengths = np.minimum(store.lengths(), 256)
+    sas = SizeAwareSampler(lengths, 8192, seed=0, growth=1.3)
+    padded = real = 0
+    for _ in range(60):
+        idx, L = sas.sample_batch()
+        padded += len(idx) * L
+        real += int(lengths[idx].sum())
+    waste = (padded - real) / padded
+    assert waste < (1 - 1 / 1.3) + 0.05, waste
+
+
+def _resume_matches(make):
+    """Cursor contract: state_dict mid-stream -> identical batch future."""
+    a = make()
+    for _ in range(7):
+        a.sample_batch()
+    cur = a.state_dict()
+    want = [a.sample_batch() for _ in range(10)]
+    b = make()
+    b.load_state_dict(cur)
+    got = [b.sample_batch() for _ in range(10)]
+    for (i1, l1), (i2, l2) in zip(want, got):
+        assert l1 == l2 and np.array_equal(i1, i2)
+
+
+def test_size_aware_resume_bit_exact_uniform(tmp_path):
+    store, _ = _corpus(tmp_path)
+    lengths = store.lengths()
+    _resume_matches(lambda: SizeAwareSampler(lengths, 2048, seed=9))
+
+
+def test_size_aware_resume_bit_exact_composed(tmp_path):
+    store, _ = _corpus(tmp_path)
+    lengths = store.lengths()
+    _resume_matches(
+        lambda: SizeAwareSampler(
+            lengths, 2048, seed=9,
+            base=ClusterSampler(greedy_length_clusters(lengths, 8), seed=4),
+        )
+    )
+
+
+def test_size_aware_cursor_rejects_bucket_mismatch(tmp_path):
+    store, _ = _corpus(tmp_path)
+    lengths = store.lengths()
+    cur = SizeAwareSampler(lengths, 2048, seed=0).state_dict()
+    other = SizeAwareSampler(lengths, 2048, seed=0, boundaries=[64, 256])
+    with pytest.raises(ValueError, match="bucket"):
+        other.load_state_dict(cur)
+
+
+if HAS_HYPOTHESIS:
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        lens=st.lists(st.integers(1, 200), min_size=5, max_size=60),
+        budget=st.integers(256, 4096),
+        warm=st.integers(0, 12),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_size_aware_property_budget_and_resume(lens, budget, warm, seed):
+        lengths = np.asarray(lens, np.int64)
+        sas = SizeAwareSampler(lengths, budget, seed=seed)
+        for _ in range(warm):
+            idx, L = sas.sample_batch()
+            assert len(idx) * L <= budget and (lengths[idx] <= L).all()
+        cur = sas.state_dict()
+        want = [sas.sample_batch() for _ in range(5)]
+        sas2 = SizeAwareSampler(lengths, budget, seed=seed)
+        sas2.load_state_dict(cur)
+        got = [sas2.sample_batch() for _ in range(5)]
+        for (i1, l1), (i2, l2) in zip(want, got):
+            assert l1 == l2 and np.array_equal(i1, i2)
+
+else:  # pragma: no cover - seeded fallback where hypothesis is absent
+
+    def test_size_aware_property_budget_and_resume():
+        rng = np.random.default_rng(0)
+        for _ in range(25):
+            lengths = rng.integers(1, 200, size=int(rng.integers(5, 60)))
+            budget = int(rng.integers(256, 4096))
+            sas = SizeAwareSampler(lengths, budget, seed=int(rng.integers(2**31)))
+            for _ in range(int(rng.integers(0, 12))):
+                idx, L = sas.sample_batch()
+                assert len(idx) * L <= budget and (lengths[idx] <= L).all()
+            cur = sas.state_dict()
+            want = [sas.sample_batch() for _ in range(5)]
+            # ctor seed is irrelevant after restore: the cursor carries
+            # the full rng state
+            sas2 = SizeAwareSampler(lengths, budget, seed=0)
+            sas2.load_state_dict(cur)
+            got = [sas2.sample_batch() for _ in range(5)]
+            for (i1, l1), (i2, l2) in zip(want, got):
+                assert l1 == l2 and np.array_equal(i1, i2)
+
+
+# --------------------------------------------------------------------- #
+# background producer
+# --------------------------------------------------------------------- #
+def _mlm(tmp_path, seed=9):
+    mm, tok = build_synthetic_protein_memmap(
+        str(tmp_path / "mm" / "p"), n=200, seed=2
+    )
+    return MLMBatches(mm, tok, None, batch=4, seq_len=64, seed=seed)
+
+
+def test_producer_preserves_order(tmp_path):
+    bare = iter(_mlm(tmp_path))
+    with BackgroundProducer(_mlm(tmp_path), depth=3) as prod:
+        for _ in range(12):
+            a, b = next(bare), next(prod)
+            assert all(np.array_equal(a[k], b[k]) for k in a)
+
+
+def test_producer_resume_bit_exact(tmp_path):
+    with BackgroundProducer(_mlm(tmp_path), depth=3) as prod:
+        for _ in range(9):
+            next(prod)
+        cur = prod.state_dict()
+        assert cur["consumed"] == 9
+        want = [next(prod)["tokens"].copy() for _ in range(6)]
+    p2 = BackgroundProducer(_mlm(tmp_path), depth=3)
+    p2.load_state_dict(cur)
+    with p2:
+        got = [next(p2)["tokens"].copy() for _ in range(6)]
+    assert all(np.array_equal(a, b) for a, b in zip(want, got))
+
+
+def test_producer_cursor_excludes_prefetched(tmp_path):
+    """The checkpoint cursor reflects CONSUMED batches only — prefetch
+    depth never leaks into what a resume replays."""
+    import time
+
+    prod = BackgroundProducer(_mlm(tmp_path), depth=4)
+    with prod:
+        next(prod)
+        time.sleep(0.3)  # let the worker fill the queue well past us
+        cur = prod.state_dict()
+    assert cur["consumed"] == 1
+    p2 = BackgroundProducer(_mlm(tmp_path), depth=4)
+    p2.load_state_dict(cur)
+    bare = iter(_mlm(tmp_path))
+    next(bare)  # skip batch 0
+    with p2:
+        assert np.array_equal(next(p2)["tokens"], next(bare)["tokens"])
+
+
+def test_producer_finite_stream_and_close(tmp_path):
+    store, _ = _corpus(tmp_path, n=40, shard_tokens=512)
+    reader = store.reader()
+    prod = BackgroundProducer(reader, depth=2)
+    with prod:
+        out = list(prod)
+    assert len(out) == 40  # StopIteration propagated after the epoch
+    with pytest.raises(StopIteration):  # stays exhausted, protocol-correct
+        next(prod)
+    prod.close()  # idempotent
+
+    # a CLOSED (not exhausted) producer refuses to restart its worker
+    p2 = BackgroundProducer(store.reader(), depth=2)
+    with p2:
+        next(p2)
+    with pytest.raises(RuntimeError, match="closed"):
+        next(p2)
+
+
+def test_producer_propagates_worker_error():
+    class Boom:
+        def __iter__(self):
+            yield {"x": 1}
+            raise RuntimeError("poisoned shard")
+
+    prod = BackgroundProducer(Boom(), depth=2)
+    with prod:
+        assert next(prod) == {"x": 1}
+        with pytest.raises(RuntimeError, match="poisoned shard"):
+            next(prod)
+
+
+def test_producer_close_unblocks_full_queue():
+    """close() must not deadlock against a worker blocked on put()."""
+
+    def forever():
+        while True:
+            yield np.zeros((256,), np.int32)
+
+    prod = BackgroundProducer(forever(), depth=1)
+    next(prod)
+    import time
+
+    time.sleep(0.2)  # worker now blocked on the full queue
+    t0 = time.perf_counter()
+    prod.close()
+    assert time.perf_counter() - t0 < 5.0
+    assert prod._thread is None
+
+
+def test_producer_rejects_late_restore(tmp_path):
+    prod = BackgroundProducer(_mlm(tmp_path), depth=2)
+    with prod:
+        cur = prod.state_dict()
+        next(prod)
+        with pytest.raises(RuntimeError, match="after iteration"):
+            prod.load_state_dict(cur)
+
+
+# --------------------------------------------------------------------- #
+# CLM EOS separators + bucketed pipelines
+# --------------------------------------------------------------------- #
+def test_clm_inserts_eos_between_documents(tmp_path):
+    mm, tok = build_synthetic_protein_memmap(
+        str(tmp_path / "mm" / "p"), n=100, seed=2
+    )
+    c = CLMBatches(mm, batch=2, seq_len=128, seed=0, eos_id=tok.eos_id)
+    flat = np.concatenate(
+        [next(iter(c))["tokens"].reshape(-1) for _ in range(4)]
+    )
+    n_eos = int((flat == tok.eos_id).sum())
+    # every packed document ends in exactly one separator; with ~100-200
+    # token docs a 1024-token window must contain several
+    assert n_eos >= 3
+    # document boundary integrity: replay the same rng and check each
+    # sampled document appears contiguously, followed by the EOS
+    rng = np.random.default_rng(0)
+    pos = 0
+    while pos < len(flat) - 300:
+        doc = mm[int(rng.integers(len(mm)))]
+        assert np.array_equal(flat[pos : pos + len(doc)], doc)
+        assert flat[pos + len(doc)] == tok.eos_id
+        pos += len(doc) + 1
+
+
+def test_clm_eos_cursor_bit_exact(tmp_path):
+    mm, tok = build_synthetic_protein_memmap(
+        str(tmp_path / "mm" / "p"), n=100, seed=2
+    )
+
+    def make():
+        return CLMBatches(mm, batch=2, seq_len=96, seed=5, eos_id=tok.eos_id)
+
+    a = make()
+    ia = iter(a)
+    for _ in range(6):
+        next(ia)
+    cur = a.state_dict()
+    want = [next(ia)["tokens"].copy() for _ in range(6)]
+    b = make()
+    b.load_state_dict(cur)
+    ib = iter(b)
+    got = [next(ib)["tokens"].copy() for _ in range(6)]
+    assert all(np.array_equal(x, y) for x, y in zip(want, got))
+
+
+def test_mlm_bucketed_respects_budget(tmp_path):
+    store, tok = _corpus(tmp_path)
+    lengths = np.minimum(store.lengths(), 128)
+    sas = SizeAwareSampler(lengths, 1024, seed=5)
+    it = iter(MLMBatches(store, tok, sas, batch=8, seq_len=128))
+    shapes = set()
+    for _ in range(30):
+        b = it.__next__()
+        r, L = b["tokens"].shape
+        assert r * L <= 1024
+        assert b["targets"].shape == (r, L)
+        shapes.add((r, L))
+    assert len(shapes) <= len(sas.boundaries)
+
+
+def test_clm_bucketed_masks_padding(tmp_path):
+    store, tok = _corpus(tmp_path)
+    lengths = np.minimum(store.lengths(), 128)
+    sas = SizeAwareSampler(lengths, 1024, seed=6)
+    b = next(iter(CLMBatches(store, batch=8, seq_len=128, sampler=sas)))
+    assert b["tokens"].shape == b["loss_mask"].shape
+    # mask covers exactly the real tokens (pad id 0 beyond each length)
+    real = b["loss_mask"].astype(bool)
+    assert (b["tokens"][~real] == 0).all()
+    assert (b["loss_mask"].sum(axis=1) >= 1).all()
+
+
+# --------------------------------------------------------------------- #
+# ClusterSampler vectorization regression
+# --------------------------------------------------------------------- #
+def test_cluster_sampler_vectorized_draws_preserved():
+    """The vectorized sample() must consume the Generator's bit stream
+    exactly as the former per-item loop did: identical indices for any
+    fixed seed (resume cursors saved before the change stay valid)."""
+    rng0 = np.random.default_rng(7)
+    members = [
+        rng0.integers(0, 10_000, size=int(rng0.integers(1, 50))).tolist()
+        for _ in range(23)
+    ]
+    for seed in (0, 11, 99):
+        got = ClusterSampler(members, seed=seed).sample(777)
+        # inline oracle: the pre-vectorization implementation
+        rng = np.random.default_rng(seed)
+        m = [np.asarray(x, np.int64) for x in members]
+        cl = rng.integers(0, len(m), size=777)
+        want = np.array(
+            [m[c][rng.integers(len(m[c]))] for c in cl], np.int64
+        )
+        assert np.array_equal(got, want)
+
+
+def test_cluster_sampler_interleaved_draws_preserved():
+    """Same equivalence across MULTIPLE sample() calls (the stream, not
+    just one call, must match — cursors resume mid-stream)."""
+    members = [[1, 2, 3], [4], [5, 6], [7, 8, 9, 10]]
+    s = ClusterSampler(members, seed=3)
+    got = np.concatenate([s.sample(n) for n in (5, 1, 17, 4)])
+    rng = np.random.default_rng(3)
+    m = [np.asarray(x, np.int64) for x in members]
+    want = []
+    for n in (5, 1, 17, 4):
+        cl = rng.integers(0, len(m), size=n)
+        want += [m[c][rng.integers(len(m[c]))] for c in cl]
+    assert np.array_equal(got, np.asarray(want, np.int64))
+
+
+# --------------------------------------------------------------------- #
+# full stack: the acceptance resume test
+# --------------------------------------------------------------------- #
+def _tiny_mlm_cfg():
+    from repro.core.config import ModelConfig
+
+    return ModelConfig(
+        name="dp-test", family="dense", num_layers=2, d_model=32,
+        num_heads=2, num_kv_heads=2, d_ff=64, vocab_size=64,
+        dtype="float32", objective="mlm",
+    )
+
+
+def test_trainer_resume_bit_exact_full_data_plane(tmp_path):
+    """THE acceptance contract: sharded store + size-aware sampler +
+    background producer, interrupted at a checkpoint — the resumed run's
+    final params match the uninterrupted run bit-for-bit (which requires
+    the exact same batch sequence through every prefetch layer)."""
+    import jax
+
+    from repro.core.config import TrainConfig
+    from repro.launch.train import make_batches
+    from repro.models.model import build_model
+    from repro.training.loop import Trainer
+
+    cfg = _tiny_mlm_cfg()
+    tc = TrainConfig(
+        global_batch=4, seq_len=64, learning_rate=1e-3, total_steps=8,
+        warmup_steps=2, decay_steps=2, log_every=2,
+        ckpt_dir=str(tmp_path / "ck"), ckpt_every=3,
+    )
+    model = build_model(cfg)
+
+    def mk():
+        return make_batches(
+            cfg, tc, str(tmp_path / "data"),
+            sharded=True, max_tokens=512, producer_depth=2,
+        )
+
+    b1 = mk()
+    try:
+        s1, _ = Trainer(model, tc, verbose=False).run(b1)
+    finally:
+        b1.close()
+
+    b2 = mk()
+    try:
+        s2, _ = Trainer(model, tc, verbose=False).run(
+            b2, resume_from=str(tmp_path / "ck" / "step_3")
+        )
+    finally:
+        b2.close()
+
+    for a, b in zip(
+        jax.tree.leaves(jax.device_get(s1.params)),
+        jax.tree.leaves(jax.device_get(s2.params)),
+    ):
+        assert np.array_equal(a, b)
+    for a, b in zip(
+        jax.tree.leaves(jax.device_get(s1.opt)),
+        jax.tree.leaves(jax.device_get(s2.opt)),
+    ):
+        assert np.array_equal(a, b)
+
+
+def test_trainer_compiles_once_per_shape(tmp_path):
+    """Bucketed batches produce a bounded shape set; the trainer compiles
+    each ONCE and reuses it (no per-step recompile)."""
+    from repro.core.config import TrainConfig
+    from repro.models.model import build_model
+    from repro.training.loop import Trainer
+
+    cfg = _tiny_mlm_cfg()
+    tc = TrainConfig(
+        global_batch=4, seq_len=64, learning_rate=1e-3, total_steps=10,
+        warmup_steps=2, decay_steps=2, log_every=100,
+    )
+    store, tok = _corpus(tmp_path)
+    # two buckets with very different capacities force >= 2 shapes fast
+    lengths = np.minimum(store.lengths(), 64)
+    sas = SizeAwareSampler(lengths, 256, seed=0, boundaries=[48, 64])
+    pipe = MLMBatches(store, tok, sas, batch=4, seq_len=64)
+    tr = Trainer(build_model(cfg), tc, verbose=False)
+    tr.prepare(pipe)
+    builds = []
+    orig = tr._build_compiled
+
+    def spy(batch, sig):
+        builds.append(sig)
+        return orig(batch, sig)
+
+    tr._build_compiled = spy
+    while tr.step_idx < tc.total_steps:
+        tr.step()
+    assert len(builds) == len(set(builds))  # never rebuilt a seen shape
+    assert len(tr._compiled) == len(builds) >= 1

@@ -1,0 +1,147 @@
+"""``LLM.embed`` / ``Engine.embed``: batched embedding extraction through
+the serving engine — pooled-vector correctness against a direct forward
+oracle, input ordering, determinism, telemetry parity, and validation.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.config import ModelConfig
+from repro.models.model import build_model
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import TraceRecorder
+from repro.serving.api import LLM
+
+
+def build(family="dense", **over):
+    kw = dict(
+        name="t", family=family, num_layers=2, d_model=64, num_heads=4,
+        num_kv_heads=2, d_ff=128, vocab_size=64, dtype="float32",
+    )
+    kw.update(over)
+    cfg = ModelConfig(**kw)
+    model = build_model(cfg)
+    return model, model.init(jax.random.PRNGKey(0))
+
+
+def oracle(model, params, prompt):
+    """Direct masked-mean pooling of the train-mode hidden states for one
+    unpadded prompt — what embed() must reproduce batched and padded."""
+    t = jnp.asarray(np.asarray(prompt, np.int32)[None])
+    x, _ = model._decoder_input(params, {"tokens": t}, "train")
+    x, _, _ = model._backbone(params, x, mode="train")
+    return np.asarray(x[0].astype(jnp.float32).mean(axis=0))
+
+
+def _prompts(n=7, lo=3, hi=40, seed=0):
+    rng = np.random.default_rng(seed)
+    return [
+        rng.integers(5, 64, size=int(L)).tolist()
+        for L in rng.integers(lo, hi, size=n)
+    ]
+
+
+def test_embed_matches_direct_pooling_oracle():
+    model, params = build()
+    llm = LLM(model, params, slots=3, max_len=64)
+    prompts = _prompts()
+    out = llm.embed(prompts)
+    assert out.shape == (len(prompts), 64) and out.dtype == np.float32
+    for i, p in enumerate(prompts):
+        want = oracle(model, params, p)
+        np.testing.assert_allclose(out[i], want, atol=1e-4)
+
+
+def test_embed_bidirectional_mlm_model():
+    """Geneformer-style bidirectional stacks embed through the same path;
+    padding is visible to attention exactly as during MLM training, and
+    only valid positions enter the mean."""
+    model, params = build(causal=False, objective="mlm")
+    llm = LLM(model, params, slots=4, max_len=64)
+    prompts = _prompts(5)
+    out = llm.embed(prompts)
+    for i, p in enumerate(prompts):
+        # the oracle is padding-free; rows whose length hits their bucket
+        # exactly see no pads, so compare one such prompt directly
+        if 2 ** int(np.ceil(np.log2(len(p)))) == len(p) or len(p) <= 8:
+            np.testing.assert_allclose(
+                out[i], oracle(model, params, p), atol=1e-4
+            )
+    assert out.shape == (5, 64)
+
+
+def test_embed_input_order_and_determinism():
+    model, params = build()
+    llm = LLM(model, params, slots=2, max_len=64)
+    prompts = _prompts(9)
+    a = llm.embed(prompts)
+    assert np.array_equal(a, llm.embed(prompts))  # deterministic
+    perm = [4, 0, 8, 2, 6, 1, 7, 3, 5]
+    b = llm.embed([prompts[i] for i in perm])
+    np.testing.assert_allclose(b, a[perm], atol=1e-5)
+
+
+def test_embed_independent_of_batch_composition():
+    """A prompt's vector must not depend on which prompts share its
+    dispatch (masked pooling + row padding leak nothing across rows)."""
+    model, params = build()
+    llm = LLM(model, params, slots=4, max_len=64)
+    prompts = _prompts(6, lo=10, hi=14)  # same bucket, shared dispatches
+    together = llm.embed(prompts)
+    alone = np.stack([llm.embed([p])[0] for p in prompts])
+    np.testing.assert_allclose(together, alone, atol=1e-5)
+
+
+def test_embed_telemetry_counters_and_trace():
+    model, params = build()
+    reg, tr = MetricsRegistry(), TraceRecorder()
+    llm = LLM(model, params, slots=3, max_len=64, metrics=reg, trace=tr)
+    prompts = _prompts(5)
+    llm.embed(prompts)
+    c = llm.engine.counters
+    assert c["submitted"] == c["completed"] == 5
+    evs = [e["event"] for e in tr.events()]
+    assert "prefill" in evs and "finish" in evs
+    # registry/counter parity (the _bump contract)
+    vals = {r["name"]: r.get("value") for r in reg.snapshot()}
+    assert vals['engine_requests_total{event="submitted"}'] == 5
+    assert vals['engine_requests_total{event="completed"}'] == 5
+
+
+def test_embed_validation():
+    model, params = build()
+    llm = LLM(model, params, slots=2, max_len=32)
+    with pytest.raises(ValueError, match="overflows"):
+        llm.embed([[1] * 33])
+    with pytest.raises(ValueError, match="empty"):
+        llm.embed([[1, 2], []])
+    assert llm.embed([]).shape == (0, 64)
+
+
+def test_embed_rejects_encoder_decoder():
+    model, params = build(
+        is_encoder_decoder=True, encoder_layers=2, frontend="audio_stub",
+        num_frontend_tokens=8, use_rope=False, max_pos=64,
+    )
+    llm = LLM(model, params, slots=2, max_len=32)
+    with pytest.raises(ValueError, match="decoder-only"):
+        llm.embed([[1, 2, 3]])
+
+
+def test_embed_one_bulk_transfer():
+    """The device->host hop is ONE bulk device_get for the whole call,
+    regardless of how many bucketed dispatches ran."""
+    model, params = build()
+    llm = LLM(model, params, slots=2, max_len=64)
+    prompts = _prompts(9)  # multiple buckets AND multiple row-chunks
+    llm.embed(prompts)  # compile all buckets first
+    calls = []
+    real_get = jax.device_get
+    jax.device_get = lambda x: calls.append(1) or real_get(x)
+    try:
+        out = llm.embed(prompts)
+    finally:
+        jax.device_get = real_get
+    assert len(calls) == 1
+    assert out.shape == (9, 64)
