@@ -89,3 +89,43 @@ def run(report):
     w = jnp.ones((d,))
     us = _bench(lambda x: ops.rmsnorm(x, w), xr)
     report("kernels/rmsnorm_4096x1024", us, "")
+
+    # ragged grouped matmul (MoE expert FFN dispatch) vs the dense one-hot
+    # formulation it replaces: dense computes every token against every
+    # expert through a (T, E) mask einsum — O(T*E*K*N) FLOPs vs the
+    # ragged path's O(T*K*N).  The gap must widen with E; we assert the
+    # ragged path wins outright at E >= 8.
+    def dense_one_hot(x, w_e, group_sizes):
+        # x is sorted by expert; rebuild per-row expert ids and one-hot mix
+        ends = jnp.cumsum(group_sizes)
+        gid = jnp.searchsorted(ends, jnp.arange(x.shape[0]), side="right")
+        one_hot = jax.nn.one_hot(gid, w_e.shape[0], dtype=x.dtype)  # (T, E)
+        h = jnp.einsum("te,tk,ekn->tn", one_hot, x, w_e)
+        return jnp.where((jnp.arange(x.shape[0]) < ends[-1])[:, None], h, 0)
+
+    Tm, Km, Nm = 2048, 256, 512
+    for E in (8, 16):
+        xg = jax.random.normal(key, (Tm, Km), jnp.float32)
+        we = jax.random.normal(jax.random.fold_in(key, E), (E, Km, Nm),
+                               jnp.float32) * 0.02
+        # uneven group sizes incl. an empty expert — the ragged win case.
+        # max_group_size (the MoE capacity) enables the capacity-batched
+        # xla fallback; the TPU pallas kernel needs no bound at all.
+        sizes = jnp.full((E,), Tm // E, jnp.int32)
+        sizes = sizes.at[0].add(sizes[1]).at[1].set(0)
+        cap = 2 * Tm // E
+        us_r = _bench(
+            lambda x, w: ops.grouped_matmul(
+                x, w, sizes, impl="xla", max_group_size=cap
+            ),
+            xg, we,
+        )
+        us_d = _bench(dense_one_hot, xg, we, sizes)
+        report(f"kernels/moe/gmm_ragged_E{E}", us_r,
+               f"megablocks-style; dense/ragged={us_d/us_r:.2f}")
+        report(f"kernels/moe/gmm_dense_one_hot_E{E}", us_d,
+               "O(T*E) mask einsum")
+        assert us_r < us_d, (
+            f"ragged grouped matmul slower than dense one-hot at E={E}: "
+            f"{us_r:.1f}us vs {us_d:.1f}us"
+        )

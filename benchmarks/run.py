@@ -45,6 +45,9 @@ _TRAJECTORIES = {
     "BENCH_train.json": lambda name: (
         name.startswith("train_step") or name.startswith("data/")
     ),
+    # kernel microbenchmarks that gate a perf claim (ragged MoE dispatch
+    # vs dense one-hot) — tracked so the ratio is diffable over time
+    "BENCH_kernels.json": lambda name: name.startswith("kernels/moe/"),
 }
 
 

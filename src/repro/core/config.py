@@ -59,6 +59,9 @@ class ModelConfig:
     n_shared_experts: int = 0
     capacity_factor: float = 1.25
     router_aux_coef: float = 0.01
+    # entropy-deficit coefficient (log E − mean router entropy): pushes the
+    # router toward exploration; 0 keeps the legacy loss exactly
+    router_entropy_coef: float = 0.0
 
     # --- SSM (Mamba2 / SSD) ---
     ssm_state: int = 0

@@ -1,0 +1,300 @@
+"""Pallas TPU ragged grouped matmul (megablocks-style MoE expert GEMMs).
+
+``gmm`` computes ``y[i] = x[i] @ w[g(i)]`` where rows of ``x`` are sorted
+by group and ``group_sizes[g]`` (dynamic, varies per step) gives each
+group's contiguous row count — the expert-FFN shape after sort-by-expert
+dispatch (``models/moe.py``).  ``gmm_dw`` is the ragged weight gradient
+``dw[g] = x_g.T @ dy_g``.  Together with ``dx = gmm(dy, w.swapaxes(1, 2))``
+they form the custom-VJP triple wired in ``kernels/ops.grouped_matmul``.
+
+The ragged structure never materializes a dense ``(M, E)`` one-hot: tile
+metadata is computed OUTSIDE the kernel from ``group_sizes`` (static
+shapes, dynamic values) and rides in through ``PrefetchScalarGridSpec`` so
+BlockSpec index maps can steer every grid step:
+
+  * the flattened tile list visits each group's m-tiles in order; a group
+    whose rows span ``t`` tiles gets ``t`` entries and an EMPTY group gets
+    none — empty experts cost zero compute (tile-level skip);
+  * a static bound ``L = num_m_tiles + E`` covers the worst case (every
+    group boundary splits a tile); unused entries replay the last valid
+    tile with an empty row-mask, which rewrites identical bytes;
+  * tiles sharing an output block are consecutive, so the block stays
+    resident in VMEM across them (the standard Pallas revisiting
+    contract) and each visitor read-modify-writes only its group's rows;
+    the first visitor zero-fills the rows no group owns, which also
+    zeroes rows past ``sum(group_sizes)``.
+
+Grid is ``(n_tiles, L)`` — the ragged axis is minor, so the output block
+index changes only when the tile list moves on.  K is kept whole in VMEM
+(MoE d_model/d_ff fit comfortably); M/N/K are zero-padded to tile
+multiples and sliced back.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+from repro.kernels import tiling
+
+
+def _round_up(n: int, m: int) -> int:
+    return n + (-n % m)
+
+
+# --------------------------------------------------------------------- #
+# tile metadata (jnp, traced values / static shapes)
+# --------------------------------------------------------------------- #
+def gmm_metadata(
+    group_sizes: jax.Array,  # (E,) int32
+    num_m_tiles: int,
+    block_m: int,
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Flattened per-tile schedule for the forward kernel.
+
+    Returns ``(gid, mid, lo, hi, first)``, each ``(L,)`` int32 with
+    ``L = num_m_tiles + E``: the group whose weight block tile ``l``
+    loads, the m-tile it writes, the [lo, hi) global-row interval its
+    rows must fall in, and whether it is the first writer of its output
+    block (first writers zero-fill foreign rows).  A virtual tail group
+    covers m-tiles past ``sum(group_sizes)`` with an empty mask so those
+    output rows are zeroed, not garbage.
+    """
+    E = group_sizes.shape[0]
+    sizes = group_sizes.astype(jnp.int32)
+    ends_g = jnp.cumsum(sizes)
+    starts_g = ends_g - sizes
+    total = ends_g[-1]
+    first_t = starts_g // block_m
+    last_t = jnp.maximum(ends_g - 1, starts_g) // block_m
+    ntiles = jnp.where(sizes > 0, last_t - first_t + 1, 0)      # (E,)
+    tile_total = (total + block_m - 1) // block_m
+    cnt = jnp.concatenate([ntiles, (num_m_tiles - tile_total)[None]])
+    csum = jnp.cumsum(cnt)                                       # (E+1,)
+    n_valid = csum[-1]
+
+    L = num_m_tiles + E
+    li = jnp.arange(L, dtype=jnp.int32)
+    g = jnp.searchsorted(csum, li, side="right").astype(jnp.int32)
+    g = jnp.minimum(g, E)                   # E = virtual tail group
+    off = li - (csum[g] - cnt[g])           # tile index within the group
+    gid = jnp.minimum(g, E - 1)             # w block (tail reads any; masked)
+    is_tail = g == E
+    mid = jnp.where(is_tail, tile_total, first_t[gid]) + off
+    lo = jnp.where(is_tail, 1, starts_g[gid])
+    hi = jnp.where(is_tail, 0, ends_g[gid])
+
+    valid = li < n_valid
+    last = jnp.maximum(n_valid - 1, 0)
+    mid = jnp.where(valid, mid, mid[last])  # replay last tile, empty mask
+    gid = jnp.where(valid, gid, gid[last])
+    lo = jnp.where(valid, lo, 1)
+    hi = jnp.where(valid, hi, 0)
+    first = jnp.concatenate(
+        [jnp.ones((1,), bool), mid[1:] != mid[:-1]]
+    ) & valid
+    return gid, mid, lo, hi, first.astype(jnp.int32)
+
+
+def tgmm_metadata(
+    group_sizes: jax.Array,  # (E,) int32
+    num_m_tiles: int,
+    block_m: int,
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Schedule for the ragged dW kernel (output indexed by GROUP).
+
+    Same flattened layout, but every group gets at least one entry —
+    an empty group's degenerate entry has an empty row-mask and, being
+    its group's first (and only) writer, zero-fills that expert's
+    gradient block.  No tail entries: rows past the total belong to no
+    group and must not contribute.
+    """
+    E = group_sizes.shape[0]
+    sizes = group_sizes.astype(jnp.int32)
+    ends_g = jnp.cumsum(sizes)
+    starts_g = ends_g - sizes
+    first_t = starts_g // block_m
+    last_t = jnp.maximum(ends_g - 1, starts_g) // block_m
+    ntiles = jnp.maximum(jnp.where(sizes > 0, last_t - first_t + 1, 1), 1)
+    csum = jnp.cumsum(ntiles)                                    # (E,)
+    n_valid = csum[-1]
+
+    L = num_m_tiles + E
+    li = jnp.arange(L, dtype=jnp.int32)
+    g = jnp.searchsorted(csum, li, side="right").astype(jnp.int32)
+    gid = jnp.minimum(g, E - 1)
+    off = li - (csum[gid] - ntiles[gid])
+    mid = jnp.minimum(first_t[gid] + off, num_m_tiles - 1)
+
+    valid = li < n_valid
+    lo = jnp.where(valid, starts_g[gid], 1)
+    hi = jnp.where(valid, ends_g[gid], 0)
+    first = jnp.concatenate(
+        [jnp.ones((1,), bool), gid[1:] != gid[:-1]]
+    ) & valid
+    return gid, mid, lo, hi, first.astype(jnp.int32)
+
+
+# --------------------------------------------------------------------- #
+# forward kernel: y (M, N) = x (M, K) @ w[group] (K, N), ragged groups
+# --------------------------------------------------------------------- #
+def _gmm_kernel(
+    gid_ref, mid_ref, lo_ref, hi_ref, first_ref,   # scalar-prefetch (L,)
+    x_ref,   # (bm, K)  — the m-tile picked by the index map
+    w_ref,   # (1, K, bn) — the group's weight tile
+    o_ref,   # (bm, bn)
+    *,
+    block_m: int,
+):
+    l = pl.program_id(1)
+    rows = mid_ref[l] * block_m + jax.lax.broadcasted_iota(
+        jnp.int32, (block_m, 1), 0
+    )
+    mask = (rows >= lo_ref[l]) & (rows < hi_ref[l])              # (bm, 1)
+    acc = jax.lax.dot_general(
+        x_ref[...], w_ref[0],
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(first_ref[l] == 1)
+    def _init():
+        o_ref[...] = jnp.where(mask, acc, 0.0).astype(o_ref.dtype)
+
+    @pl.when(first_ref[l] == 0)
+    def _update():
+        o_ref[...] = jnp.where(mask, acc.astype(o_ref.dtype), o_ref[...])
+
+
+def gmm(
+    x: jax.Array,            # (M, K) rows sorted by group
+    w: jax.Array,            # (E, K, N) per-group weights
+    group_sizes: jax.Array,  # (E,) int32 contiguous row counts
+    *,
+    block_m: int = 128,
+    block_n: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Ragged grouped matmul.  Rows past ``sum(group_sizes)`` yield zeros."""
+    M, K = x.shape
+    E, _, N = w.shape
+    bm, Mp = tiling.pick_block(M, block_m)
+    bm = max(8, bm)
+    Mp = _round_up(Mp, bm)
+    bn, Np = tiling.pick_block(N, block_n)
+    bn = _round_up(bn, 128)
+    Np = _round_up(Np, bn)
+    Kp = _round_up(K, 128)
+    xp = tiling.pad_dim(tiling.pad_dim(x, 0, Mp), 1, Kp)
+    wp = tiling.pad_dim(tiling.pad_dim(w, 1, Kp), 2, Np)
+    num_m_tiles = Mp // bm
+    gid, mid, lo, hi, first = gmm_metadata(group_sizes, num_m_tiles, bm)
+    L = num_m_tiles + E
+
+    out = pl.pallas_call(
+        functools.partial(_gmm_kernel, block_m=bm),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=5,   # gid, mid, lo, hi, first
+            grid=(Np // bn, L),
+            in_specs=[
+                pl.BlockSpec(
+                    (bm, Kp), lambda n, l, gid, mid, lo, hi, fi: (mid[l], 0)
+                ),
+                pl.BlockSpec(
+                    (1, Kp, bn),
+                    lambda n, l, gid, mid, lo, hi, fi: (gid[l], 0, n),
+                ),
+            ],
+            out_specs=pl.BlockSpec(
+                (bm, bn), lambda n, l, gid, mid, lo, hi, fi: (mid[l], n)
+            ),
+        ),
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), x.dtype),
+        interpret=interpret,
+    )(gid, mid, lo, hi, first, xp, wp)
+    return out[:M, :N]
+
+
+# --------------------------------------------------------------------- #
+# ragged weight gradient: dw (E, K, N) = segment_e( x_e.T @ dy_e )
+# --------------------------------------------------------------------- #
+def _tgmm_kernel(
+    gid_ref, mid_ref, lo_ref, hi_ref, first_ref,
+    x_ref,    # (bm, K)
+    dy_ref,   # (bm, bn)
+    o_ref,    # (1, K, bn) fp32 — the group's gradient tile
+    *,
+    block_m: int,
+):
+    l = pl.program_id(1)
+    rows = mid_ref[l] * block_m + jax.lax.broadcasted_iota(
+        jnp.int32, (block_m, 1), 0
+    )
+    mask = (rows >= lo_ref[l]) & (rows < hi_ref[l])              # (bm, 1)
+    xm = jnp.where(mask, x_ref[...], 0)
+    contrib = jax.lax.dot_general(
+        xm, dy_ref[...],
+        (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                                            # (K, bn)
+
+    @pl.when(first_ref[l] == 1)
+    def _init():
+        o_ref[0] = contrib
+
+    @pl.when(first_ref[l] == 0)
+    def _acc():
+        o_ref[0] = o_ref[0] + contrib
+
+
+def gmm_dw(
+    x: jax.Array,            # (M, K) rows sorted by group
+    dy: jax.Array,           # (M, N) output cotangent, same row order
+    group_sizes: jax.Array,  # (E,) int32
+    *,
+    block_m: int = 128,
+    block_n: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Per-group ``x_g.T @ dy_g`` → (E, K, N) float32 (empty groups: zeros)."""
+    M, K = x.shape
+    E = group_sizes.shape[0]
+    N = dy.shape[1]
+    bm, Mp = tiling.pick_block(M, block_m)
+    bm = max(8, bm)
+    Mp = _round_up(Mp, bm)
+    bn, Np = tiling.pick_block(N, block_n)
+    bn = _round_up(bn, 128)
+    Np = _round_up(Np, bn)
+    Kp = _round_up(K, 128)
+    xp = tiling.pad_dim(tiling.pad_dim(x, 0, Mp), 1, Kp)
+    dyp = tiling.pad_dim(tiling.pad_dim(dy, 0, Mp), 1, Np)
+    num_m_tiles = Mp // bm
+    gid, mid, lo, hi, first = tgmm_metadata(group_sizes, num_m_tiles, bm)
+    L = num_m_tiles + E
+
+    out = pl.pallas_call(
+        functools.partial(_tgmm_kernel, block_m=bm),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=5,
+            grid=(Np // bn, L),
+            in_specs=[
+                pl.BlockSpec(
+                    (bm, Kp), lambda n, l, gid, mid, lo, hi, fi: (mid[l], 0)
+                ),
+                pl.BlockSpec(
+                    (bm, bn), lambda n, l, gid, mid, lo, hi, fi: (mid[l], n)
+                ),
+            ],
+            out_specs=pl.BlockSpec(
+                (1, Kp, bn), lambda n, l, gid, mid, lo, hi, fi: (gid[l], 0, n)
+            ),
+        ),
+        out_shape=jax.ShapeDtypeStruct((E, Kp, Np), jnp.float32),
+        interpret=interpret,
+    )(gid, mid, lo, hi, first, xp, dyp)
+    return out[:, :K, :N]

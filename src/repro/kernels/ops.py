@@ -786,3 +786,116 @@ def ssd_decode_step(
     y = jnp.einsum("bhpn,bhn->bhp", new_state, cf)
     y = y + xf * D.astype(jnp.float32)[None, :, None]
     return y[:, None].astype(x.dtype), new_state.astype(state.dtype)
+
+
+# --------------------------------------------------------------------- #
+# ragged grouped matmul (MoE expert GEMMs)
+# --------------------------------------------------------------------- #
+class _GmmCfg(NamedTuple):
+    """Hashable static config for the pallas grouped-matmul custom-VJP."""
+
+    block_m: int
+    block_n: int
+    interpret: bool
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _gmm_pallas(cfg: _GmmCfg, x, w, group_sizes):
+    from repro.kernels import grouped_matmul as _gm
+
+    return _gm.gmm(
+        x, w, group_sizes,
+        block_m=cfg.block_m, block_n=cfg.block_n, interpret=cfg.interpret,
+    )
+
+
+def _gmm_pallas_fwd(cfg: _GmmCfg, x, w, group_sizes):
+    return _gmm_pallas(cfg, x, w, group_sizes), (x, w, group_sizes)
+
+
+def _gmm_pallas_bwd(cfg: _GmmCfg, res, dy):
+    from repro.kernels import grouped_matmul as _gm
+
+    x, w, gs = res
+    dx = _gm.gmm(
+        dy, jnp.swapaxes(w, 1, 2), gs,
+        block_m=cfg.block_m, block_n=cfg.block_n, interpret=cfg.interpret,
+    ).astype(x.dtype)
+    dw = _gm.gmm_dw(
+        x, dy, gs,
+        block_m=cfg.block_m, block_n=cfg.block_n, interpret=cfg.interpret,
+    ).astype(w.dtype)
+    return dx, dw, None  # group sizes are integer — no cotangent
+
+
+_gmm_pallas.defvjp(_gmm_pallas_fwd, _gmm_pallas_bwd)
+
+
+def _gmm_xla(x, w, group_sizes):
+    """XLA fallback: ``lax.ragged_dot`` (differentiable, CPU/GPU/TPU).
+
+    Rows past ``sum(group_sizes)`` are masked to zero to match the
+    kernel contract (the dropped-token tail in ``models/moe.py``)."""
+    y = jax.lax.ragged_dot(
+        x, w, group_sizes.astype(jnp.int32),
+        preferred_element_type=jnp.float32,
+    )
+    rows = jnp.arange(x.shape[0], dtype=jnp.int32)
+    total = jnp.sum(group_sizes.astype(jnp.int32))
+    y = jnp.where((rows < total)[:, None], y, 0.0)
+    return y.astype(x.dtype)
+
+
+def _gmm_xla_bounded(x, w, group_sizes, max_size: int):
+    """XLA fallback when a static per-group row bound is known (MoE always
+    has one: the capacity).  Scatters rows into a static ``(E, max_size,
+    K)`` buffer and runs ONE batched GEMM — ``O(E·max_size·K·N)`` FLOPs,
+    independent of E for fixed total capacity, where ``lax.ragged_dot``
+    lowers to a dense masked loop (``O(M·E·K·N)``) on CPU/GPU.  Rows of a
+    group beyond ``max_size`` (contract violation) come back zero, as do
+    rows past ``sum(group_sizes)``.  Natively differentiable."""
+    E = w.shape[0]
+    m = jnp.arange(x.shape[0], dtype=jnp.int32)
+    sizes = group_sizes.astype(jnp.int32)
+    ends = jnp.cumsum(sizes)
+    gid = jnp.searchsorted(ends, m, side="right")
+    g = jnp.minimum(gid, E - 1)
+    rank = m - (ends - sizes)[g]
+    valid = (m < ends[-1]) & (rank < max_size)
+    xe = jnp.zeros((E, max_size, x.shape[1]), x.dtype)
+    xe = xe.at[jnp.where(valid, g, E), rank].set(x, mode="drop")
+    ye = jnp.einsum(
+        "eck,ekn->ecn", xe, w, preferred_element_type=jnp.float32
+    )
+    y = jnp.where(valid[:, None], ye[g, rank], 0.0)
+    return y.astype(x.dtype)
+
+
+def grouped_matmul(
+    x: jax.Array,            # (M, K) rows sorted by group
+    w: jax.Array,            # (E, K, N) per-group (expert) weights
+    group_sizes: jax.Array,  # (E,) int32 contiguous row counts (dynamic)
+    *,
+    impl: str = "auto",
+    interpret: bool = False,
+    max_group_size: Optional[int] = None,
+) -> jax.Array:
+    """Ragged grouped matmul ``y[i] = x[i] @ w[g(i)]`` — the MoE expert
+    FFN after sort-by-expert dispatch.  Differentiable end-to-end on
+    every impl: ``pallas`` pairs the ragged forward kernel with the
+    ragged dX/dW backward kernels via ``jax.custom_vjp``
+    (``grouped_matmul.py``), ``xla`` is ``lax.ragged_dot`` — or, when
+    the caller supplies ``max_group_size`` (a static upper bound on every
+    group, e.g. the MoE capacity), the capacity-batched GEMM
+    ``_gmm_xla_bounded`` whose cost does not grow with E — and ``naive``
+    the (M, K, N) gather oracle in ``ref.py``.  Rows past
+    ``sum(group_sizes)`` (capacity-dropped slots) come back zero."""
+    impl, interpret = _resolve(impl, interpret)
+    if impl == "pallas":
+        cfg = _GmmCfg(block_m=128, block_n=128, interpret=interpret)
+        return _gmm_pallas(cfg, x, w, group_sizes)
+    if impl == "naive":
+        return ref.grouped_matmul_ref(x, w, group_sizes)
+    if max_group_size is not None:
+        return _gmm_xla_bounded(x, w, group_sizes, int(max_group_size))
+    return _gmm_xla(x, w, group_sizes)

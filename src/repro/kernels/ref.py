@@ -191,3 +191,24 @@ def sample_ref(
     Zf = jnp.sum(jnp.where(keep, jnp.exp(z - m[:, None]), 0.0), axis=-1)
     logp = z_tok - m - jnp.log(jnp.maximum(Zf, 1e-30))
     return tok.astype(jnp.int32), logp
+
+
+def grouped_matmul_ref(
+    x: jax.Array,            # (M, K) rows sorted by group
+    w: jax.Array,            # (E, K, N)
+    group_sizes: jax.Array,  # (E,) int32
+) -> jax.Array:
+    """Gather/scatter oracle for the ragged grouped matmul: materializes a
+    per-row weight gather (M, K, N) — tests only.  Rows past
+    ``sum(group_sizes)`` are zeroed, matching the kernel contract."""
+    M = x.shape[0]
+    E = w.shape[0]
+    ends = jnp.cumsum(group_sizes.astype(jnp.int32))
+    rows = jnp.arange(M, dtype=jnp.int32)
+    gid = jnp.searchsorted(ends, rows, side="right")
+    w_row = jnp.take(w, jnp.minimum(gid, E - 1), axis=0)     # (M, K, N)
+    y = jnp.einsum(
+        "mk,mkn->mn", x.astype(jnp.float32), w_row.astype(jnp.float32)
+    )
+    y = jnp.where((rows < ends[-1])[:, None], y, 0.0)
+    return y.astype(x.dtype)

@@ -187,7 +187,22 @@ class Model:
         loss = (losses * mask).sum() / denom
         metrics = {"ce_loss": loss, "aux_loss": aux, "tokens": denom}
         if cfg.num_experts:
-            loss = loss + cfg.router_aux_coef * aux
+            # aux is the layer-summed router stats vector (moe.aux_shape):
+            # [lb_loss, entropy_deficit, dropped, slots, per-expert load…]
+            lb, ent_def = aux[0], aux[1]
+            loss = (
+                loss
+                + cfg.router_aux_coef * lb
+                + cfg.router_entropy_coef * ent_def
+            )
+            n_moe = max(T.num_moe_layers(cfg), 1)
+            metrics["aux_loss"] = lb
+            metrics["router_entropy"] = (
+                jnp.log(float(cfg.num_experts)) - ent_def / n_moe
+            )
+            metrics["router_drop_frac"] = aux[2] / jnp.maximum(aux[3], 1.0)
+            load = aux[4:]
+            metrics["router_load"] = load / jnp.maximum(load.sum(), 1e-9)
         return loss, metrics
 
     # ------------------------------------------------------------ serving

@@ -19,7 +19,7 @@ from repro.core.config import ModelConfig
 from repro.core.module import P, stack_tree
 from repro.models import layers as L
 from repro.models.attention import attention_apply, attention_defs
-from repro.models.moe import moe_apply, moe_defs
+from repro.models.moe import aux_shape, moe_apply, moe_defs
 from repro.models.ssm import init_ssm_cache, ssm_apply, ssm_defs
 from repro.parallel.sharding import ShardingCtx
 
@@ -39,6 +39,14 @@ def num_units(cfg: ModelConfig) -> int:
     u = unit_size(cfg)
     assert cfg.num_layers % u == 0, (cfg.num_layers, u)
     return cfg.num_layers // u
+
+
+def num_moe_layers(cfg: ModelConfig) -> int:
+    """Total MoE layers in the stack (normalizes summed aux statistics)."""
+    if not cfg.num_experts:
+        return 0
+    u = unit_size(cfg)
+    return sum(1 for i in range(u) if cfg.is_moe_layer(i)) * num_units(cfg)
 
 
 def _sublayer_defs(cfg: ModelConfig, li: int, cross: bool) -> Dict[str, Any]:
@@ -90,8 +98,9 @@ def _apply_sublayer(
     block_table=None,
     chunk_valid=None,
 ) -> Tuple[jax.Array, Any, jax.Array]:
-    """Returns (x, new_cache, aux_loss)."""
-    aux = jnp.zeros((), jnp.float32)
+    """Returns (x, new_cache, aux) — aux is the fixed-shape router stats
+    vector for MoE models (``moe.aux_shape``), a scalar zero for dense."""
+    aux = jnp.zeros(aux_shape(cfg), jnp.float32)
     new_cache: Dict[str, Any] = {}
     h = L.norm_apply(cfg, params["norm1"], x)
     is_attn = cfg.is_attn_layer(li)
@@ -220,7 +229,7 @@ def decoder_stack(
     if mode == "train":
         body = _remat_wrap(unit_body, ctx.pc.remat_policy)
 
-    aux0 = jnp.zeros((), jnp.float32)
+    aux0 = jnp.zeros(aux_shape(cfg), jnp.float32)
 
     if not ctx.pc.scan_layers:
         n = num_units(cfg)

@@ -144,6 +144,29 @@ class ShardingCtx:
             return PartitionSpec()
         return spec(self.rules, *logical)
 
+    # ------------------------------------------------------- expert axis
+    def expert_axis_size(self) -> int:
+        """Product of the mesh axes the logical ``experts`` dim maps to
+        (1 off-mesh or when the rule is unmapped)."""
+        if self.mesh is None:
+            return 1
+        ax = self.rules.get("experts")
+        if ax is None:
+            return 1
+        sizes = mesh_axis_sizes(self.mesh)
+        n = 1
+        for a in (ax if isinstance(ax, tuple) else (ax,)):
+            n *= sizes.get(a, 1)
+        return n
+
+    def expert_parallel(self, num_experts: int) -> bool:
+        """True when the expert-parallel MoE path applies: a real mesh
+        whose expert axis evenly divides the expert count.  Otherwise
+        MoE degrades to the replicated ragged path (and ``fit_spec``
+        degrades the expert-dim weight placement to replication)."""
+        n = self.expert_axis_size()
+        return n > 1 and num_experts % n == 0
+
 
 def null_ctx() -> ShardingCtx:
     return ShardingCtx(None, ParallelConfig())

@@ -185,8 +185,16 @@ class Trainer:
                     ("grad_norm", "last flushed global gradient norm"),
                     ("tokens_per_sec", "interval throughput"),
                     ("lr", "current learning rate"),
+                    ("aux_loss", "router load-balance loss (MoE)"),
+                    ("router_entropy", "mean router entropy (MoE)"),
+                    ("router_drop_frac", "capacity-dropped slot fraction"),
                 )
             }
+            self._g_load = metrics.gauge(
+                "train_router_load",
+                "per-expert fraction of kept routed slots",
+                labels=("expert",),
+            )
 
     # ------------------------------------------------------------ placement
     def _place(self, batch):
@@ -328,7 +336,10 @@ class Trainer:
                     )
             else:
                 self._skip_streak = 0
-        m = {k: float(v) for k, v in fetched[-1].items()}
+        last = fetched[-1]
+        # vector-valued metrics (per-expert router load) stay out of the
+        # scalar history dict and feed the labeled gauge instead
+        m = {k: float(v) for k, v in last.items() if np.ndim(v) == 0}
         step_time = dt / max(n, 1)
         m.update(
             step=s,
@@ -353,9 +364,13 @@ class Trainer:
             self._c_steps.inc(n)
             self._c_tokens.inc(tokens)
             self._h_step.observe(step_time)
-            for name in ("loss", "grad_norm", "tokens_per_sec", "lr"):
+            for name in self._tg:
                 if name in m:
                     self._tg[name].set(m[name])
+            load = last.get("router_load")
+            if load is not None and np.ndim(load) == 1:
+                for e, frac in enumerate(np.asarray(load)):
+                    self._g_load.labels(str(e)).set(float(frac))
         self.history.append(m)
         if self.verbose:
             skips = f"  SKIPPED {self.skipped_total}" if self.skipped_total else ""

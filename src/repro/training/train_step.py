@@ -134,35 +134,47 @@ def make_train_step(model: Model, tc: TrainConfig):
             zeros = jax.tree.map(
                 lambda p: jnp.zeros(p.shape, jnp.float32), params
             )
-            init = (zeros, *([jnp.float32(0.0)] * 4))
+            # token-weighted: loss/ce average over tokens; microbatch-mean:
+            # aux/router stats are already per-layer-summed means per
+            # microbatch, so they average over the accum steps
+            moe = bool(model.cfg.num_experts)
+            acc0 = {"loss": 0.0, "ce_loss": 0.0, "tokens": 0.0,
+                    "aux_loss": 0.0}
+            if moe:
+                acc0.update(
+                    router_entropy=0.0, router_drop_frac=0.0,
+                    router_load=jnp.zeros((model.cfg.num_experts,)),
+                )
+            acc0 = jax.tree.map(lambda v: jnp.asarray(v, jnp.float32), acc0)
+            init = (zeros, acc0)
 
             def one(carry, mb):
-                g_acc, l_acc, ce_acc, d_acc, a_acc = carry
+                g_acc, acc = carry
                 (loss, m), grads = loss_and_grads(params, mb)
                 d = m["tokens"].astype(jnp.float32)
                 g_acc = jax.tree.map(
                     lambda a, g: a + d * g.astype(jnp.float32), g_acc, grads
                 )
-                return (
-                    g_acc,
-                    l_acc + d * loss,
-                    ce_acc + d * m["ce_loss"],
-                    d_acc + d,
-                    a_acc + m["aux_loss"] / accum,
-                ), None
+                upd = {
+                    "loss": acc["loss"] + d * loss,
+                    "ce_loss": acc["ce_loss"] + d * m["ce_loss"],
+                    "tokens": acc["tokens"] + d,
+                    "aux_loss": acc["aux_loss"] + m["aux_loss"] / accum,
+                }
+                if moe:
+                    for k in ("router_entropy", "router_drop_frac",
+                              "router_load"):
+                        upd[k] = acc[k] + m[k] / accum
+                return (g_acc, upd), None
 
-            (g_acc, l_acc, ce_acc, d_acc, a_acc), _ = jax.lax.scan(
-                one, init, micro
-            )
+            (g_acc, acc), _ = jax.lax.scan(one, init, micro)
+            d_acc = acc["tokens"]
             grads = jax.tree.map(
                 lambda g, p: (g / d_acc).astype(p.dtype), g_acc, params
             )
-            metrics = {
-                "loss": l_acc / d_acc,
-                "ce_loss": ce_acc / d_acc,
-                "aux_loss": a_acc,
-                "tokens": d_acc,
-            }
+            metrics = dict(
+                acc, loss=acc["loss"] / d_acc, ce_loss=acc["ce_loss"] / d_acc
+            )
         grads, gnorm = adamw.clip_by_global_norm(grads, tc.grad_clip)
         lr = lr_at(tc, state.opt.step + 1)  # first update uses step 1 (warmup>0)
         new_params, new_opt = adamw.apply_updates(

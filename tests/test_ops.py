@@ -117,7 +117,7 @@ def test_moe_capacity_dispatch_approaches_dense_oracle():
     out, aux = moe_apply(cfg, null_ctx(), params, x)
     want = moe_ref_dense(cfg, params, x)
     np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=1e-4, rtol=1e-3)
-    assert float(aux) >= 1.0 - 1e-3  # aux >= 1 by Cauchy-Schwarz at any routing
+    assert float(aux[0]) >= 1.0 - 1e-3  # lb >= 1 by Cauchy-Schwarz at any routing
 
 
 def test_moe_capacity_drops_tokens_when_tight():
